@@ -1,0 +1,101 @@
+"""Shared benchmark harness: small-scale training/eval loops on CPU.
+
+Every per-table benchmark compares attention kinds on identical budgets.
+``--full`` scales towards paper protocol sizes; the default ``--quick``
+sizes finish on 1 CPU core in minutes and preserve relative ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AttentionConfig, ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.schedule import warmup_cosine
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+KINDS = ("flow", "softmax", "linear")
+
+
+def with_kind(cfg: ModelConfig, kind: str, **attn_over) -> ModelConfig:
+    att = dataclasses.replace(cfg.attention, kind=kind, **attn_over)
+    return dataclasses.replace(cfg, attention=att)
+
+
+def train_eval_classifier(
+    cfg: ModelConfig, init_fn, loss_fn, train_data: dict, eval_data: dict,
+    *, steps: int, batch: int, lr: float = 1e-3, seed: int = 0,
+    log_every: int = 0,
+) -> dict:
+    """Generic classifier train/eval; returns accuracy + timing."""
+    params = init_fn(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    acfg = AdamWConfig(weight_decay=0.01, grad_clip=1.0)
+
+    @jax.jit
+    def step_fn(params, opt, batch_t, lr_t):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch_t), has_aux=True
+        )(params)
+        new_p, new_o, stats = adamw_update(grads, opt, params, lr_t, acfg)
+        return new_p, new_o, metrics
+
+    n = len(jax.tree.leaves(train_data)[0])
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, batch)
+        bt = {k: jnp.asarray(v[idx]) for k, v in train_data.items()}
+        lr_t = warmup_cosine(jnp.asarray(s), peak_lr=lr,
+                             warmup=max(steps // 20, 5), total=steps)
+        params, opt, metrics = step_fn(params, opt, bt, lr_t)
+        if log_every and s % log_every == 0:
+            print(f"    step {s} loss={float(metrics['loss']):.3f}")
+    train_time = time.time() - t0
+
+    @jax.jit
+    def eval_fn(params, batch_t):
+        _, m = loss_fn(params, batch_t)
+        return m
+
+    ne = len(jax.tree.leaves(eval_data)[0])
+    accs, losses = [], []
+    eb = 64
+    for i in range(0, ne, eb):
+        bt = {k: jnp.asarray(v[i : i + eb]) for k, v in eval_data.items()}
+        m = eval_fn(params, bt)
+        accs.append(float(m.get("acc", 0.0)) * len(jax.tree.leaves(bt)[0]))
+        losses.append(float(m["loss"]) * len(jax.tree.leaves(bt)[0]))
+    return {
+        "acc": sum(accs) / ne,
+        "loss": sum(losses) / ne,
+        "train_time_s": round(train_time, 2),
+        "steps_per_s": round(steps / train_time, 2),
+    }
+
+
+def save_table(name: str, table: dict):
+    path = RESULTS / f"bench_{name}.json"
+    path.write_text(json.dumps(table, indent=1))
+    print(f"[saved] {path}")
+
+
+def print_table(title: str, rows: dict[str, dict], cols: list[str]):
+    print(f"\n== {title} ==")
+    header = "model".ljust(28) + "".join(c.rjust(14) for c in cols)
+    print(header)
+    for name, row in rows.items():
+        line = name.ljust(28)
+        for c in cols:
+            v = row.get(c, "")
+            line += (f"{v:.4f}" if isinstance(v, float) else str(v)).rjust(14)
+        print(line)

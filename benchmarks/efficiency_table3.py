@@ -1,0 +1,67 @@
+"""Table 3 — efficiency (steps/s) vs sequence length, training + inference.
+
+Flow/linear attention must stay ~flat in sequence length while softmax
+degrades quadratically — the paper's core scaling claim, measured here on
+CPU with a small model (relative scaling is hardware-independent)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_table, with_kind
+from repro.configs import get_config
+from repro.models import lm
+
+
+def _bench(fn, *args, iters: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return iters / (time.time() - t0)
+
+
+def run(*, quick: bool = True) -> dict:
+    lens = (256, 512, 1024) if quick else (1024, 2048, 3072, 4096)
+    base = get_config("flowformer_lm")
+    base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
+                               n_kv_heads=4, d_ff=256, vocab_size=1024,
+                               remat=False)
+    rows = {}
+    for kind in ("flow", "softmax", "linear"):
+        cfg = with_kind(base, kind)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        row = {}
+        for n in lens:
+            toks = jax.random.randint(jax.random.PRNGKey(1), (2, n), 0,
+                                      cfg.vocab_size)
+            batch = {"inputs": toks, "targets": toks}
+
+            fwd = jax.jit(lambda p, b: lm.forward(p, b["inputs"], cfg)[0])
+            step = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg)[0]))
+            row[f"infer_{n}"] = round(_bench(fwd, params, batch), 2)
+            row[f"train_{n}"] = round(_bench(step, params, batch), 2)
+        rows[kind] = row
+    cols = [f"{m}_{n}" for m in ("infer", "train") for n in lens]
+    print_table("Table 3 (efficiency): steps/s by sequence length", rows, cols)
+    # scaling factor: throughput ratio first->last length (1.0 = perfectly linear)
+    for kind, row in rows.items():
+        inf = row[f"infer_{lens[0]}"] / max(row[f"infer_{lens[-1]}"], 1e-9)
+        trn = row[f"train_{lens[0]}"] / max(row[f"train_{lens[-1]}"], 1e-9)
+        ideal = lens[-1] / lens[0]
+        rows[kind]["slowdown_vs_linear_ideal"] = round(
+            max(inf, trn) / ideal, 2
+        )
+    save_table("efficiency_table3", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--full" not in sys.argv)

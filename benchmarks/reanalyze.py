@@ -1,0 +1,48 @@
+"""Re-derive flops/bytes/collectives from persisted HLO (no recompiles).
+
+    PYTHONPATH=src python -m benchmarks.reanalyze [--dryrun results/dryrun2.json]
+
+Used when the HLO cost model in repro/launch/hlo_analysis.py is refined:
+every record with an ``hlo`` pointer gets its totals recomputed in place.
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import pathlib
+
+from repro.launch.hlo_analysis import Module
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=str(RESULTS / "dryrun2.json"))
+    args = ap.parse_args()
+    path = pathlib.Path(args.dryrun)
+    data = json.loads(path.read_text())
+    changed = 0
+    for key, rec in data.items():
+        hp = rec.get("hlo")
+        if rec.get("status") != "ok" or not hp:
+            continue
+        hfile = RESULTS / hp
+        if not hfile.exists():
+            continue
+        with gzip.open(hfile, "rt") as f:
+            hlo = f.read()
+        tc = rec.get("trip_counts", {})
+        fallback = [tc.get("micro", 1), tc.get("layers", 1), tc.get("inner", 1)]
+        mod = Module(hlo, fallback)
+        rec["flops_total"] = mod.dot_flops()
+        rec["bytes_total"] = mod.hbm_bytes()
+        rec["collectives"] = mod.collective_bytes()
+        changed += 1
+    path.write_text(json.dumps(data, indent=1))
+    print(f"reanalyzed {changed} records -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > results/report.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.roofline import analyze
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def fmt_bytes(b: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b/div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def dryrun_table(data: dict, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | plan | compile | HLO flops/chip | HBM bytes/chip | "
+        "collective bytes/chip | peak temp mem/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, rec in sorted(data.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        if "opt:" in key or rec.get("seq_shard"):
+            continue
+        plan = rec.get("plan", {})
+        ptxt = plan.get("param_mode", "")
+        if plan.get("microbatch"):
+            ptxt += f"+mb{plan['microbatch']}"
+        mem = rec.get("memory", {})
+        tmp = mem.get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {ptxt} | {rec['compile_s']}s "
+            f"| {rec['flops_total']:.3e} | {fmt_bytes(rec['bytes_total'])} "
+            f"| {fmt_bytes(rec['collectives']['total_bytes'])} "
+            f"| {fmt_bytes(tmp)} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(data: dict) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "useful | RL-frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, rec in sorted(data.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != "single":
+            continue
+        if "opt:" in key or rec.get("seq_shard"):
+            continue
+        a = analyze(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(a['compute_s'])} "
+            f"| {fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} "
+            f"| **{a['bottleneck']}** | {a['useful_compute_ratio']:.3f} "
+            f"| {a['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def perf_comparison(data: dict, cells: list[str]) -> str:
+    """Before/after rows for hillclimbed cells (baseline vs |opt:* keys)."""
+    lines = [
+        "| cell | variant | compute | memory | collective | bound | RL-frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for base_key in cells:
+        variants = [(k, v) for k, v in sorted(data.items())
+                    if k.startswith(base_key) and v.get("status") == "ok"]
+        for k, rec in variants:
+            a = analyze(rec)
+            tag = k[len(base_key):] or "|baseline"
+            lines.append(
+                f"| {base_key} | {tag.lstrip('|')} | {fmt_s(a['compute_s'])} "
+                f"| {fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} "
+                f"| {a['bottleneck']} | {a['roofline_fraction']:.3f} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    data = json.loads((RESULTS / "dryrun.json").read_text())
+    n_ok = sum(1 for v in data.values() if v.get("status") == "ok")
+    print(f"<!-- generated from results/dryrun.json: {n_ok} ok cells -->\n")
+    print("### Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table(data, "single"))
+    print("\n### Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(data, "multi"))
+    print("\n### Roofline (single-pod, per chip)\n")
+    print(roofline_table(data))
+
+
+if __name__ == "__main__":
+    main()

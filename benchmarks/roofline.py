@@ -1,0 +1,130 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads results/dryrun.json (written by ``repro.launch.dryrun``) and derives,
+per (arch x shape x mesh) cell, the three roofline terms in SECONDS:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_chip / ICI_bw
+
+HLO_FLOPs/bytes come from the trip-count-scaled HLO parse (per-device SPMD
+program — already "per chip").  Collective wire bytes per op type use ring
+algorithms on the ICI: all-reduce moves 2x(k-1)/k of the payload, all-gather
+/ reduce-scatter (k-1)/k, all-to-all (k-1)/k, collective-permute 1x.
+
+Hardware model (TPU v5e): 197e12 bf16 FLOP/s, 819e9 B/s HBM, 50e9 B/s
+per ICI link (collective bytes are per-device aggregates over links).
+
+Also reports MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the ratio
+MODEL_FLOPS_per_chip / HLO_FLOPs — the "useful compute" fraction that
+exposes remat / double-forward / replication waste.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,  # ring: 2(k-1)/k ~ 2
+    "all-gather": 1.0,  # (k-1)/k ~ 1 (result-shape already full size)
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D analytic model flops for the whole cell (train) or 2*N*D
+    (inference), using active params for MoE."""
+    from repro.configs import get_config
+
+    cfg = get_config(rec["arch"])
+    n_params = active_params(cfg)
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    gb = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+          "long_500k": 1}[shape]
+    tokens = seq * gb
+    factor = 6.0 if shape == "train_4k" else 2.0
+    return factor * n_params * tokens
+
+
+def active_params(cfg) -> float:
+    """Params touched per token (MoE: shared + top_k experts + backbone)."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    fe = m.d_ff_expert or cfg.d_ff
+    per_exp = cfg.d_model * fe * (3 if cfg.act == "swiglu" else 2)
+    inactive = (m.n_experts - m.top_k) * per_exp * cfg.n_layers
+    return total - inactive
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    flops = rec["flops_total"]  # per chip (SPMD per-device program)
+    hbm = rec["bytes_total"]
+    coll = rec.get("collectives", {}).get("by_op", {})
+    wire = sum(_WIRE_FACTOR.get(op, 1.0) * b for op, b in coll.items())
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec) / chips
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_per_chip": float(f"{mf:.6g}"),
+        "useful_compute_ratio": float(f"{mf / max(flops, 1):.4g}"),
+        # roofline fraction: useful-model-compute time / critical-path term
+        "roofline_fraction": float(
+            f"{(mf / PEAK_FLOPS) / max(total, 1e-12):.4g}"
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=str(RESULTS / "dryrun.json"))
+    ap.add_argument("--out", default=str(RESULTS / "roofline.json"))
+    args = ap.parse_args()
+
+    data = json.loads(pathlib.Path(args.dryrun).read_text())
+    out = {}
+    rows = []
+    for key, rec in sorted(data.items()):
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                out[key] = {"status": "skipped", "reason": rec.get("reason")}
+            continue
+        a = analyze(rec)
+        out[key] = {**rec, "roofline": a}
+        rows.append((key, a))
+
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=1))
+    hdr = (f"{'cell':58s} {'compute_s':>11s} {'memory_s':>11s} "
+           f"{'collect_s':>11s} {'bound':>10s} {'useful':>7s} {'RLfrac':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for key, a in rows:
+        print(f"{key:58s} {a['compute_s']:11.4g} {a['memory_s']:11.4g} "
+              f"{a['collective_s']:11.4g} {a['bottleneck']:>10s} "
+              f"{a['useful_compute_ratio']:7.3f} {a['roofline_fraction']:7.3f}")
+    print(f"\n[saved] {args.out}")
+
+
+if __name__ == "__main__":
+    main()

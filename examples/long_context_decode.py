@@ -1,0 +1,44 @@
+"""Long-context decoding: the flow state never grows.
+
+Decodes from a model whose "context" position is 500k tokens deep and shows
+per-step latency and state size are identical to a 100-token context —
+the property that makes the ``long_500k`` assignment shape trivial for
+Flowformer (and impossible for vanilla KV-cache softmax at this scale).
+
+    PYTHONPATH=src python examples/long_context_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+
+
+def bench_decode(cfg, params, caches, pos, steps=20):
+    tok = jnp.zeros((1, 1), jnp.int32)
+    dec = jax.jit(lambda p, t, c, q: lm.decode(p, t, c, cfg, q))
+    logits, caches = dec(params, tok, caches, jnp.asarray(pos))  # compile
+    jax.block_until_ready(logits)
+    t0 = time.time()
+    for i in range(steps):
+        logits, caches = dec(params, tok, caches, jnp.asarray(pos + i))
+    jax.block_until_ready(logits)
+    return (time.time() - t0) / steps * 1e3
+
+
+def main():
+    cfg = get_smoke_config("granite_8b")  # flow attention by default
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    caches = lm.init_caches(cfg, batch=1, max_len=8)
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+    print(f"flow decode state: {nbytes/1024:.1f} KiB, independent of context")
+    for pos in (100, 10_000, 500_000):
+        ms = bench_decode(cfg, params, caches, pos)
+        print(f"  context position {pos:>7,d}: {ms:6.2f} ms/token")
+    print("(same state, same latency — a 500k context costs what 100 does)")
+
+
+if __name__ == "__main__":
+    main()

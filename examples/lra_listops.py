@@ -1,0 +1,19 @@
+"""Long-sequence classification (LRA-style ListOps): Flowformer vs baselines.
+
+    PYTHONPATH=src python examples/lra_listops.py
+"""
+import sys
+
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from benchmarks import lra_table2
+
+
+def main():
+    rows = lra_table2.run(quick=True)
+    best = max(rows, key=lambda k: rows[k]["avg"])
+    print(f"\nbest on average: {best} ({rows[best]['avg']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

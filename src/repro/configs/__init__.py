@@ -1,0 +1,64 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Ten assigned architectures (exact public-literature configs) plus the
+paper's own Flowformer configurations.  Each module exposes ``config()``
+(full size) and ``smoke_config()`` (reduced, CPU-runnable same-family).
+"""
+from __future__ import annotations
+
+import importlib
+
+ASSIGNED_ARCHS = (
+    "nemotron_4_15b",
+    "nemotron_4_340b",
+    "granite_8b",
+    "deepseek_coder_33b",
+    "deepseek_v2_lite_16b",
+    "granite_moe_3b_a800m",
+    "whisper_small",
+    "qwen2_vl_72b",
+    "recurrentgemma_9b",
+    "mamba2_1p3b",
+)
+
+PAPER_CONFIGS = (
+    "flowformer_lra",
+    "flowformer_lm",
+    "flowformer_vision",
+    "flowformer_timeseries",
+    "flowformer_dt",
+)
+
+ALL_CONFIGS = ASSIGNED_ARCHS + PAPER_CONFIGS
+
+_ALIASES = {
+    "nemotron-4-15b": "nemotron_4_15b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "granite-8b": "granite_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "whisper-small": "whisper_small",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-1.3b": "mamba2_1p3b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str, **overrides):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    cfg = mod.config()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke_config()

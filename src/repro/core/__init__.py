@@ -1,0 +1,21 @@
+"""Flow-Attention core — the paper's contribution as composable JAX modules."""
+from repro.core.flow_attention import (
+    FlowConfig,
+    flow_attention,
+    flow_attention_causal,
+    flow_attention_nc,
+    phi_map,
+)
+from repro.core.decode import FlowState, decode_step, init_state, prefill
+
+__all__ = [
+    "FlowConfig",
+    "flow_attention",
+    "flow_attention_causal",
+    "flow_attention_nc",
+    "phi_map",
+    "FlowState",
+    "decode_step",
+    "init_state",
+    "prefill",
+]

@@ -1,0 +1,137 @@
+"""Quadratic O(n*m) reference oracles for Flow-Attention — tests only.
+
+These materialize the full attention matrix and must agree with the linear
+implementations in ``flow_attention.py`` up to matmul reassociation
+(associativity of matrix multiplication is the only difference).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flow_attention import FlowConfig, _group, _ungroup, phi_map
+
+Array = jax.Array
+
+
+def flow_attention_nc_ref(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+    """Quadratic non-causal oracle (expand-GQA semantics are obtained by
+    pre-repeating k/v; shared-GQA by grouped sums, mirroring the fast path)."""
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    hkv, m = k.shape[1], k.shape[2]
+    if cfg.gqa_mode == "expand" and hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+        hkv = hq
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    vf = v.astype(jnp.float32)
+    qg = _group(phi_q, hkv)
+
+    k_sum = phi_k.sum(axis=2)
+    q_sum = qg.sum(axis=(2, 3))
+    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + eps, k_sum + eps)
+    src_out = 1.0 / jnp.einsum("bhmd,bhd->bhm", phi_k + eps, q_sum + eps)
+    ko_sum = (phi_k * src_out[..., None]).sum(axis=2)
+    cons_sink = jnp.einsum("bhgnd,bhd->bhgn", qg + eps, ko_sum + eps)
+    qi_sum = (qg * sink_in[..., None]).sum(axis=(2, 3))
+    cons_src = jnp.clip(
+        jnp.einsum("bhmd,bhd->bhm", phi_k + eps, qi_sum + eps), -1.0, 1.0
+    )
+
+    n_sinks = qg.shape[2] * n
+    if cfg.use_competition:
+        comp = jax.nn.softmax(cons_src, axis=-1) * float(m)
+        v_hat = vf * comp[..., None]
+    else:
+        v_hat = vf
+    if cfg.use_allocation:
+        alloc = jax.nn.sigmoid(cons_sink * (float(n_sinks) / float(m)))
+    else:
+        alloc = jnp.ones_like(cons_sink)
+
+    # quadratic: materialize the (n x m) attention matrix explicitly
+    attn = jnp.einsum("bhgnd,bhmd->bhgnm", qg * sink_in[..., None], phi_k)
+    out = jnp.einsum("bhgnm,bhme->bhgne", attn, v_hat) * alloc[..., None]
+    return _ungroup(out).astype(out_dtype)
+
+
+def flow_attention_causal_ref(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+    """Quadratic causal oracle (both faithful and strict competition modes)."""
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    if cfg.gqa_mode == "expand" and hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+        hkv = hq
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    vf = v.astype(jnp.float32)
+    qg = _group(phi_q, hkv)
+    g = qg.shape[2]
+
+    pos = jnp.arange(1, n + 1, dtype=jnp.float32)
+    normal_q = pos * g
+    normal_k = pos
+
+    k_csum = jnp.cumsum(phi_k, axis=2)
+    q_csum = jnp.cumsum(qg.sum(axis=2), axis=2)
+    sink_in = normal_k / jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, k_csum + eps)
+    src_out = normal_q / jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, q_csum + eps)
+    ko_csum = jnp.cumsum(phi_k * src_out[..., None], axis=2)
+    cons_sink = jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, ko_csum + eps) / normal_q
+    qi_csum = jnp.cumsum((qg * sink_in[..., None]).sum(axis=2), axis=2)
+    cons_src = jnp.clip(
+        jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, qi_csum + eps) / normal_k,
+        -1.0,
+        1.0,
+    )
+
+    alloc = jax.nn.sigmoid(cons_sink) if cfg.use_allocation else jnp.ones_like(cons_sink)
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    attn = jnp.einsum("bhgnd,bhmd->bhgnm", qg * sink_in[..., None], phi_k)
+    attn = jnp.where(mask[None, None, None], attn, 0.0)
+
+    if not cfg.use_competition:
+        out = jnp.einsum("bhgnm,bhme->bhgne", attn, vf) * alloc[..., None]
+    elif cfg.strict_causal:
+        e = jnp.exp(cons_src)  # (B,Hkv,N)
+        z = jnp.cumsum(e, axis=-1)
+        v_w = vf * e[..., None]
+        agg = jnp.einsum("bhgnm,bhme->bhgne", attn, v_w)
+        out = agg * (normal_k / z)[:, :, None, :, None] * alloc[..., None]
+    else:
+        comp = jax.nn.softmax(cons_src, axis=-1) * float(n)
+        out = (
+            jnp.einsum("bhgnm,bhme->bhgne", attn, vf * comp[..., None])
+            * alloc[..., None]
+        )
+    return _ungroup(out).astype(out_dtype)
+
+
+def softmax_attention_ref(
+    q: Array, k: Array, v: Array, *, causal: bool = False, scale: float | None = None
+) -> Array:
+    """Vanilla softmax attention (GQA-aware) — the paper's baseline."""
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    scale = d**-0.5 if scale is None else scale
+    logits = jnp.einsum(
+        "bhnd,bhmd->bhnm", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((n, k.shape[2]), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhnm,bhme->bhne", w.astype(v.dtype), v)

@@ -1,0 +1,145 @@
+"""Partition rules: parameter/optimizer/activation PartitionSpecs.
+
+Axis convention (launch/mesh.py):
+    pod    — outer data parallelism across pods (multi-pod mesh only)
+    data   — data parallelism within a pod
+    model  — tensor/expert/sequence parallelism
+
+Parameter rules (path-suffix matched):
+    attention q/k/v projections   (d, H*hd)    -> (None, model)    head TP
+    attention out projection      (H*hd, d)    -> (model, None)
+    FFN in/gate                   (d, f)       -> (None, model)
+    FFN out                       (f, d)       -> (model, None)
+    MoE experts                   (E, ..., ..) -> (model, ...)     expert par.
+    embeddings / unembed          (V, d)       -> (model, None)    vocab TP
+    MLA kv_up / q_up              (r, H*x)     -> (None, model)
+    RG-LRU width-majors           (.., W)      -> (.., model)
+    SSD head-major projections    (d, H*P)     -> (None, model)    head TP
+    norms / router / small vecs               -> replicated
+
+ZeRO-1: optimizer moments + fp32 master params take the param spec with the
+first still-unsharded, divisible axis additionally sharded over (pod, data)
+— pjit then materializes the classic reduce-scatter(grads) -> local update
+-> all-gather(params) schedule automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on "path/leaf", spec builder) — first match wins
+_RULES: list[tuple[str, P]] = [
+    # attention
+    (r"attn.*/w[qkv]/w$", P(None, "model")),
+    (r"attn.*/wo/w$", P("model", None)),
+    (r"attn.*/(kv_up|q_up|q_down)/w$", P(None, "model")),
+    (r"attn.*/kv_down/w$", P(None, None)),
+    # ffn
+    (r"(ffn|shared)/w_(in|gate)/w$", P(None, "model")),
+    (r"(ffn|shared)/w_out/w$", P("model", None)),
+    # moe (leading expert axis)
+    (r"experts/w_(in|gate)/w$", P("model", None, None)),
+    (r"experts/w_out/w$", P("model", None, None)),
+    (r"router/w$", P(None, None)),
+    # embeddings
+    (r"(embed|head|enc_pos|embed_t)/table$", P("model", None)),
+    # rg-lru (width-major)
+    (r"rglru/w_(x|gate)/w$", P(None, "model")),
+    (r"rglru/w_out/w$", P("model", None)),
+    (r"rglru/conv_w$", P(None, "model")),
+    (r"rglru/conv_b$", P("model")),
+    (r"rglru/gate_[ax]$", P("model", None, None)),
+    (r"rglru/lam$", P("model")),
+    # ssd (head-major)
+    (r"ssd/in_(z|x)/w$", P(None, "model")),
+    (r"ssd/in_(b|c)/w$", P(None, None)),
+    (r"ssd/in_dt/w$", P(None, "model")),
+    (r"ssd/conv_x_w$", P(None, "model")),
+    (r"ssd/(a_log|dt_bias|d_skip)$", P("model")),
+    (r"ssd/norm/scale$", P("model")),
+    (r"ssd/out_proj/w$", P("model", None)),
+    # vision / decision extras
+    (r"(patch_embed|merge|classifier|action_head|embed_rtg|embed_state|embed_action)/w$",
+     P(None, None)),
+]
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh) -> P:
+    """Spec for one parameter; falls back to replication."""
+    model_size = mesh.shape.get("model", 1)
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            # only apply sharded dims that divide evenly; else replicate them
+            dims = list(spec) + [None] * (len(shape) - len(spec))
+            fixed = [
+                d if (d is None or shape[i] % model_size == 0) else None
+                for i, d in enumerate(dims[: len(shape)])
+            ]
+            return P(*fixed)
+    return P(*([None] * len(shape)))
+
+
+def tree_param_specs(params: PyTree, mesh) -> PyTree:
+    """Pytree of PartitionSpecs matching ``params``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat[0]:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        specs.append(param_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Extend a param spec with ZeRO-1 sharding over the DP axes."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp_size == 1:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, d in enumerate(dims[: len(shape)]):
+        if d is None and shape[i] % dp_size == 0 and shape[i] > 0:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            return P(*dims[: len(shape)])
+    return spec  # nothing divisible: stay DP-replicated
+
+
+def tree_zero1_specs(params: PyTree, mesh) -> PyTree:
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat[0]:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        base = param_spec(path, leaf.shape, mesh)
+        specs.append(zero1_spec(base, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def batch_spec(mesh, batch_size: int, *, seq_sharded: bool = False) -> P:
+    """Spec for (B, N, ...) activations/batches."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    baxis: Any = None
+    if dp and batch_size % dp_size == 0 and batch_size >= dp_size:
+        baxis = dp if len(dp) > 1 else dp[0]
+    saxis = "model" if seq_sharded else None
+    return P(baxis, saxis)
+
+
+def to_shardings(specs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

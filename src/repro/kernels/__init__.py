@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel directory carries the triplet required by the repo conventions:
+``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM tiling), ``ops.py``
+(jit'd wrapper with shape policing), ``ref.py`` (pure-jnp oracle).
+Validated with interpret=True on CPU; compiled on TPU.
+"""

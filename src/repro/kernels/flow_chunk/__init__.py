@@ -1,0 +1,4 @@
+from repro.kernels.flow_chunk.ops import chunked_causal_dot_pallas
+from repro.kernels.flow_chunk.ref import flow_chunk_ref
+
+__all__ = ["chunked_causal_dot_pallas", "flow_chunk_ref"]

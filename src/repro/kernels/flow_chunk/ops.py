@@ -1,0 +1,39 @@
+"""Jit'd wrapper: shape policing + padding for the flow_chunk Pallas kernel.
+
+``chunked_causal_dot_pallas`` is a drop-in for
+``repro.core.chunked.chunked_causal_dot_grouped`` (same contract, tested
+against the same oracle).  On CPU it runs in interpret mode; on TPU the
+compiled kernel keeps the carried state in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def chunked_causal_dot_pallas(
+    qg: jax.Array, k: jax.Array, v: jax.Array, *, chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """qg: (B, H, G, N, D); k: (B, H, N, D); v: (B, H, N, Dv)."""
+    interp = _INTERPRET if interpret is None else interpret
+    b, h, g, n, d = qg.shape
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    while n % c:
+        c //= 2
+    out = flow_chunk_call(
+        qg.reshape(b * h, g, n, d),
+        k.reshape(b * h, n, d),
+        v.reshape(b * h, n, dv),
+        chunk=c,
+        interpret=interp,
+    )
+    return out.reshape(b, h, g, n, dv)

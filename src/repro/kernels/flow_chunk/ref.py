@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the chunked causal aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flow_chunk_ref(q, k, v):
+    """q: (BH, G, N, D); k: (BH, N, D); v: (BH, N, Dv) -> (BH, G, N, Dv).
+
+    out[b, g, i] = q[b, g, i] . sum_{j<=i} k[b, j]^T v[b, j]
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kv = jnp.einsum("bnd,bne->bnde", kf, vf)
+    kv = jnp.cumsum(kv, axis=1)
+    out = jnp.einsum("bgnd,bnde->bgne", qf, kv)
+    return out.astype(q.dtype)

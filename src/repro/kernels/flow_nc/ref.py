@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused non-causal sink-side kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flow_nc_qside_ref(q, k_sum, ko_sum, kv, *, n_sinks, m_sources, eps=1e-6):
+    phi_q = jax.nn.sigmoid(q.astype(jnp.float32))
+    incoming = jnp.einsum("bnd,bd->bn", phi_q + eps, k_sum.astype(jnp.float32) + eps)
+    conserved = jnp.einsum("bnd,bd->bn", phi_q + eps, ko_sum.astype(jnp.float32) + eps)
+    alloc = jax.nn.sigmoid(conserved * (float(n_sinks) / float(m_sources)))
+    agg = jnp.einsum("bnd,bde->bne", phi_q / incoming[..., None],
+                     kv.astype(jnp.float32))
+    return (agg * alloc[..., None]).astype(q.dtype)

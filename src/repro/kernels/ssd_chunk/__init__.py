@@ -1,0 +1,4 @@
+from repro.kernels.ssd_chunk.ops import ssd_scan_pallas
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+
+__all__ = ["ssd_scan_pallas", "ssd_chunk_ref"]

@@ -1,0 +1,39 @@
+"""Jit'd wrapper for the SSD chunk Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_call
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    xh: jax.Array, dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+    a: jax.Array, *, chunk: int = 128, interpret: bool | None = None,
+) -> jax.Array:
+    """Head-batched SSD scan.
+
+    xh: (B, N, H, P); dt: (B, N, H) fp32 (softplus already applied);
+    bmat/cmat: (B, N, S) shared across heads; a: (H,) negative.
+    Returns y: (B, N, H, P) fp32 (without the D-skip term).
+    """
+    interp = _INTERPRET if interpret is None else interpret
+    bsz, n, h, p = xh.shape
+    s = bmat.shape[-1]
+    c = min(chunk, n)
+    while n % c:
+        c //= 2
+
+    x = (xh.astype(jnp.float32) * dt[..., None]).transpose(0, 2, 1, 3)
+    x = x.reshape(bsz * h, n, p)
+    dta = (dt * a[None, None, :]).transpose(0, 2, 1).reshape(bsz * h, n, 1)
+    bm = jnp.broadcast_to(bmat[:, None], (bsz, h, n, s)).reshape(bsz * h, n, s)
+    cm = jnp.broadcast_to(cmat[:, None], (bsz, h, n, s)).reshape(bsz * h, n, s)
+
+    y = ssd_chunk_call(x, dta, bm, cm, chunk=c, interpret=interp)
+    return y.reshape(bsz, h, n, p).transpose(0, 2, 1, 3)

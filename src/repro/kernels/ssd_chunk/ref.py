@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD chunk kernel: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dta, b, c):
+    """x: (BH, N, P) pre-scaled by dt; dta: (BH, N, 1); b, c: (BH, N, S).
+
+    h_t = exp(dta_t) h_{t-1} + x_t outer b_t ;  y_t = h_t @ c_t
+    """
+    bh, n, p = x.shape
+    s = b.shape[-1]
+
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = h * jnp.exp(at)[:, :, None] + jnp.einsum("bp,bs->bps", xt, bt)
+        y = jnp.einsum("bps,bs->bp", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dta.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    h0 = jnp.zeros((bh, p, s), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

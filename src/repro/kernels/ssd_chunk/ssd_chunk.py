@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan (decay-gated linear attention).
+
+State-space duality makes the SSD recurrence a *decay-weighted* version of
+the flow_chunk kernel (DESIGN.md §5 / kernels family note):
+
+    per chunk c, per head h:
+      cum    = cumsum(dt * A)                          in-chunk log decays
+      intra  = ((C B^T) * exp(cum_i - cum_j) * tril) @ (dt*x)
+      inter  = exp(cum_i) * (C @ S)
+      S      = exp(cum_total) * S + (B * exp(cum_total - cum_j))^T (dt*x)
+
+Grid = (batch*heads, n_chunks); the (P, N_state) fp32 state is carried in
+VMEM scratch across the sequential chunk axis, exactly like flow_chunk.
+B/C are per-position state projections (shared across heads upstream;
+ops.py pre-broadcasts per head so the kernel stays head-local).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, o_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (C, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (C, 1) — dt * A (negative)
+    bm = b_ref[0].astype(jnp.float32)  # (C, N)
+    cm = c_ref[0].astype(jnp.float32)  # (C, N)
+
+    cum = jnp.cumsum(dt, axis=0)  # (C, 1) inclusive log decay
+    diff = cum - cum.T  # (C, C): cum_i - cum_j (<= 0 on the valid triangle)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    # clamp BEFORE exp: masked upper-triangle entries are large-positive and
+    # exp() of them is inf — inf * 0 would poison the result with NaNs
+    decay = jnp.exp(jnp.minimum(diff, 0.0)) * mask
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C) = C_i . B_j
+    # x arrives pre-scaled by dt (ops.py): xdt_j = softplus(dt_j) * x_j
+    intra = jax.lax.dot_general(
+        scores * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (C, P)
+    inter = jax.lax.dot_general(
+        cm, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)  # (C, P) — state is (P, N)
+    o_ref[0] = (intra + inter).astype(o_ref.dtype)
+
+    seg = jnp.exp(cum[-1:] - cum)  # (C, 1) decay from j to chunk end
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x * seg, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+
+
+def ssd_chunk_call(
+    x: Array, dta: Array, b: Array, c: Array, *, chunk: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """x: (BH, N, P) pre-scaled by dt; dta: (BH, N, 1) = dt*A (log decays);
+    b, c: (BH, N, S).  Returns y: (BH, N, P)."""
+    bh, n, p = x.shape
+    s = b.shape[-1]
+    assert n % chunk == 0, (n, chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(bh, n // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(x, dta, b, c)

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the jitted train/serve step with full ZeRO-1/TP/FSDP shardings,
+  3. ``.lower(**input_specs).compile()`` — proving the distribution config
+     is coherent (sharding, collectives, memory) without any hardware,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (HLO-parsed, while-body trip counts folded in) into a JSON artifact
+     consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun.json]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.config import LM_SHAPES
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.hlo_analysis import collective_bytes_by_category, scale_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, shape_by_name
+from repro.launch.steps import (
+    RunPlan,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def _skip_reason(arch: str, shape_name: str, attn_kind: str) -> str | None:
+    # long_500k needs sub-quadratic attention: every arch qualifies in flow
+    # mode (the paper's point); softmax-mode full attention is skipped.
+    if shape_name == "long_500k" and attn_kind == "softmax":
+        return "long_500k skipped for quadratic full attention (DESIGN.md §5)"
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             attn_kind: str = "flow", seq_shard: bool = False,
+             plan_overrides: dict | None = None) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, kind=attn_kind)
+    )
+    shape = shape_by_name(shape_name)
+    skip = _skip_reason(arch, shape_name, attn_kind)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+                "attn": attn_kind, "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    plan = RunPlan.choose(cfg, shape, mesh)
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        jit_step, state_shape, _, plan = build_train_step(cfg, shape, mesh, plan)
+        binputs = input_specs(cfg, shape)
+        lowered = jit_step.lower(state_shape, binputs)
+    elif shape.kind == "prefill":
+        jit_step, pshape, _, plan = build_prefill_step(
+            cfg, shape, mesh, plan, seq_shard=seq_shard
+        )
+        binputs = input_specs(cfg, shape)
+        lowered = jit_step.lower(pshape, binputs)
+    else:
+        jit_step, pshape, _, plan = build_decode_step(cfg, shape, mesh, plan)
+        binputs = input_specs(cfg, shape)
+        lowered = jit_step.lower(pshape, binputs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # trip counts for while-body cost scaling (scan-over-layers + microbatch)
+    period = len(cfg.pattern)
+    n_rep = cfg.n_layers // period if (cfg.scan_layers and cfg.n_layers // period > 1) else 1
+    n_micro = 1
+    if shape.kind == "train" and plan.microbatch:
+        n_micro = max(1, shape.global_batch // plan.microbatch)
+    # SSD/chunk scans inside each layer
+    inner_chunks = 1
+    if shape.kind in ("train", "prefill"):
+        csz = cfg.ssd.chunk_size if cfg.ssd else cfg.attention.chunk_size
+        if csz:
+            inner_chunks = max(1, shape.seq_len // csz)
+
+    coll = collective_bytes_by_category(hlo, [n_micro, n_rep, inner_chunks])
+    flops, bytes_accessed = scale_costs(
+        compiled, hlo, [n_micro, n_rep, inner_chunks]
+    )
+
+    # persist the SPMD HLO (gzipped) so the analysis can be re-derived
+    # without recompiling
+    import gzip
+    import hashlib
+
+    hdir = RESULTS / "hlo"
+    hdir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}_{attn_kind}"
+    if seq_shard:
+        tag += "_sp"
+    if plan_overrides:
+        tag += "_" + "+".join(sorted(plan_overrides))
+    hpath = hdir / f"{tag}.hlo.gz"
+    with gzip.open(hpath, "wt") as f:
+        f.write(hlo)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "attn": attn_kind,
+        "seq_shard": seq_shard,
+        "status": "ok",
+        "n_chips": n_chips,
+        "plan": {"param_mode": plan.param_mode, "microbatch": plan.microbatch,
+                 "optimizer": plan.optimizer},
+        "trip_counts": {"micro": n_micro, "layers": n_rep,
+                        "inner": inner_chunks},
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem if isinstance(mem, dict) else _mem_dict(mem),
+        "cost_raw": {k: float(v) for k, v in (cost or {}).items()
+                     if isinstance(v, (int, float))},
+        "flops_total": flops,
+        "bytes_total": bytes_accessed,
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "hlo": str(hpath.relative_to(RESULTS)),
+    }
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--attn", default="flow")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list of §Perf changes: fused_vg,act_shard")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    args = ap.parse_args()
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    cells = []
+    archs = ASSIGNED_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in LM_SHAPES] if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    opts = [o for o in args.opt.split(",") if o]
+    overrides = {o: True for o in opts} if opts else None
+    for arch, shape, mp in cells:
+        key = f"{arch}|{shape}|{'multi' if mp else 'single'}|{args.attn}" + (
+            "|sp" if args.seq_shard else ""
+        ) + (f"|opt:{'+'.join(opts)}" if opts else "")
+        if key in results and results[key].get("status") in ("ok", "skipped"):
+            print(f"[cached] {key}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp, attn_kind=args.attn,
+                           seq_shard=args.seq_shard, plan_overrides=overrides)
+        except Exception as e:  # record failures: they are bugs to fix
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if mp else "single", "attn": args.attn,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(rec["error"])
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+        if rec.get("status") == "ok":
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"flops={rec['flops_total']:.3e} "
+                  f"coll={rec['collectives'].get('total_bytes', 0):.3e}B")
+
+
+if __name__ == "__main__":
+    main()

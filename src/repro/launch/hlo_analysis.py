@@ -1,0 +1,254 @@
+"""Post-SPMD HLO analysis: collective bytes, dot FLOPs, HBM-byte estimates —
+all while-loop trip-count aware.
+
+``compiled.as_text()`` is the per-device SPMD program.  XLA's HloCostAnalysis
+visits ``lax.scan`` while bodies ONCE (verified empirically), so totals for
+scan-over-layers / microbatch-accumulation / chunk scans must be recovered by
+hand: we parse every while condition's trip count (scan lowers to a
+``compare(counter, constant(N))``) and multiply costs in nested bodies by the
+product of enclosing trip counts.
+
+FLOPs: every ``dot``/``convolution`` in every computation (fusion bodies
+included) contributes 2 * prod(output dims) * prod(lhs contracting dims),
+resolved through a module-wide symbol table (operand types are not inline in
+optimized HLO).  Elementwise flops are ignored (<1% at these shapes).
+
+Bytes: per top-level op line in non-fusion computations, output bytes +
+operand bytes (a fusion's internals live in registers; its boundary IS the
+HBM traffic).  Control ops (tuple/gte/parameter/constant/bitcast) are free.
+
+Collectives: result-shape bytes per all-reduce / all-gather / reduce-scatter
+/ all-to-all / collective-permute site, trip-scaled.  benchmarks/roofline.py
+converts these to wire bytes per op type (all-reduce counts ~2x).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Module:
+    """Parsed HLO module: computations, symbol table, while multipliers."""
+
+    def __init__(self, hlo: str, fallback_trips: list[int] | None = None):
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self.types: dict[str, str] = {}  # %name -> type string
+        self._parse(hlo)
+        self.mults = self._multipliers(fallback_trips or [])
+
+    def _parse(self, hlo: str):
+        cur = None
+        for line in hlo.splitlines():
+            h = _HDR_RE.match(line)
+            if h:
+                cur = h.group(2)
+                self.comps[cur] = []
+                if h.group(1):
+                    self.entry = cur
+                # parameters: "name: type, name: type"
+                for pm in re.finditer(r"([\w\.\-]+)\s*:\s*((?:\([^)]*\))|(?:[\w\[\],]+))",
+                                      h.group(3)):
+                    self.types[pm.group(1)] = pm.group(2)
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(line)
+            d = _DEF_RE.match(line)
+            if d:
+                self.types[d.group(1)] = d.group(2)
+
+    def _trip_count(self, cond: str) -> int | None:
+        consts = []
+        for ln in self.comps.get(cond, []):
+            m = re.search(r"s32\[\]\s+constant\((\d+)\)", ln)
+            if m:
+                consts.append(int(m.group(1)))
+        return max(consts) if consts else None
+
+    def _multipliers(self, fallback: list[int]) -> dict[str, int]:
+        trip: dict[str, int] = {}
+        callers: dict[str, list[tuple[str, int]]] = defaultdict(list)
+        for name, lines in self.comps.items():
+            for ln in lines:
+                if " while(" in ln:
+                    mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                    mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                    if mb and mc:
+                        t = self._trip_count(mc.group(1))
+                        trip[mb.group(1)] = t if t is not None else (
+                            max(fallback) if fallback else 1
+                        )
+                for m in re.finditer(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)", ln):
+                    callers[m.group(1)].append((name, 0))
+
+        memo: dict[str, int] = {}
+
+        def visit(name: str, seen: frozenset) -> int:
+            if name in memo:
+                return memo[name]
+            if name in seen:
+                return 1
+            parents = callers.get(name, [])
+            if not parents:
+                return 1
+            best = 1
+            for parent, _ in parents:
+                pm = visit(parent, seen | {name})
+                best = max(best, pm * trip.get(name, 1))
+            memo[name] = best
+            return best
+
+        return {name: visit(name, frozenset()) for name in self.comps}
+
+    # ------------------------------------------------------------------
+    def dot_flops(self) -> float:
+        total = 0.0
+        for name, lines in self.comps.items():
+            mult = self.mults.get(name, 1)
+            for ln in lines:
+                d = _DEF_RE.match(ln)
+                if not d or d.group(3) not in ("dot", "convolution"):
+                    continue
+                out_type = d.group(2)
+                out_elems = 0
+                for dt, dims in _SHAPE_RE.findall(out_type):
+                    n = 1
+                    for x in _dims(dims):
+                        n *= x
+                    out_elems += n
+                k = 1
+                if d.group(3) == "dot":
+                    ops = re.findall(r"%([\w\.\-]+)", ln.split("(", 1)[1])
+                    lhs_type = self.types.get(ops[0], "") if ops else ""
+                    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                    lhs_dims = _dims(_SHAPE_RE.search(lhs_type).group(2)) if _SHAPE_RE.search(lhs_type) else []
+                    if mcd and lhs_dims:
+                        for ci in _dims(mcd.group(1)):
+                            if ci < len(lhs_dims):
+                                k *= lhs_dims[ci]
+                else:  # convolution: window elems x input features
+                    mw = re.search(r"window=\{size=([0-9x]+)", ln)
+                    if mw:
+                        for x in mw.group(1).split("x"):
+                            k *= int(x)
+                    ops = re.findall(r"%([\w\.\-]+)", ln.split("(", 1)[1])
+                    lhs_type = self.types.get(ops[0], "") if ops else ""
+                    sh = _SHAPE_RE.search(lhs_type)
+                    if sh:
+                        ldims = _dims(sh.group(2))
+                        if ldims:
+                            k *= ldims[-1]  # feature dim heuristic
+                total += mult * 2.0 * out_elems * k
+        return total
+
+    def hbm_bytes(self) -> float:
+        """HBM-traffic estimate: per top-level op, output bytes + operand
+        bytes — EXCEPT slice-like ops, which touch only the slice, not the
+        full operand (dynamic-slice of stacked scan weights would otherwise
+        count the whole (L, d, f) tensor per layer)."""
+        total = 0.0
+        for name, lines in self.comps.items():
+            if "fused" in name:  # fusion internals: register traffic
+                continue
+            mult = self.mults.get(name, 1)
+            for ln in lines:
+                d = _DEF_RE.match(ln)
+                if not d or d.group(3) in _FREE_OPS or d.group(3) == "while":
+                    continue
+                op = d.group(3)
+                lhs_name = d.group(1)
+                out_b = _shape_bytes(d.group(2))
+                if op in ("dynamic-slice", "gather", "slice"):
+                    total += mult * 2 * out_b  # read slice + write out
+                    continue
+                ops = re.findall(
+                    r"%([\w\.\-]+)",
+                    ln.split("(", 1)[1].split("metadata")[0],
+                )
+                op_sizes = [
+                    _shape_bytes(self.types[o]) for o in ops if o in self.types
+                ]
+                if op in ("dynamic-update-slice", "scatter") or (
+                    op == "fusion" and "dynamic-update-slice" in lhs_name
+                ):
+                    # in-place window update (scan output stacking): only the
+                    # written window + its sources move, not the full buffer
+                    small = sum(op_sizes) - (max(op_sizes) if op_sizes else 0)
+                    total += mult * 2 * max(small, 1)
+                    continue
+                if op == "fusion" and "dynamic-slice" in lhs_name:
+                    # windowed read of a large carried buffer
+                    small = sum(op_sizes) - (max(op_sizes) if op_sizes else 0)
+                    total += mult * (2 * out_b + small)
+                    continue
+                total += mult * (out_b + sum(op_sizes))
+        return total
+
+    def collective_bytes(self) -> dict:
+        by_op: dict[str, float] = defaultdict(float)
+        sites = 0
+        for name, lines in self.comps.items():
+            mult = self.mults.get(name, 1)
+            for ln in lines:
+                d = _DEF_RE.match(ln)
+                if not d:
+                    continue
+                op = d.group(3)
+                base = op.removesuffix("-start")
+                if base in _COLLECTIVES:
+                    by_op[base] += mult * _shape_bytes(d.group(2))
+                    sites += 1
+        return {"by_op": dict(by_op), "total_bytes": sum(by_op.values()),
+                "n_sites": sites}
+
+
+# ---------------------------------------------------------------------------
+# public API used by dryrun.py
+# ---------------------------------------------------------------------------
+def collective_bytes_by_category(hlo: str, fallback_trips=None) -> dict:
+    return Module(hlo, fallback_trips).collective_bytes()
+
+
+def scale_costs(compiled, hlo: str, fallback_trips=None) -> tuple[float, float]:
+    mod = Module(hlo, fallback_trips)
+    return mod.dot_flops(), mod.hbm_bytes()

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+composes with ``data`` for the data-parallel gradient reduction (DCN-ish
+outer ring) while ``model`` stays intra-pod (ICI).
+
+These are FUNCTIONS, not module constants — importing this module never
+touches jax device state (required by the dry-run contract).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic re-meshing."""
+    return jax.make_mesh(shape, axes)

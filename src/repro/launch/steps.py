@@ -1,0 +1,242 @@
+"""Step builders: distributed train_step / serve_step per architecture.
+
+These produce the exact jitted computations that the dry-run lowers and
+the real launchers (train.py / serve.py) execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.distribution.sharding import (
+    batch_spec,
+    dp_axes,
+    to_shardings,
+    tree_param_specs,
+    tree_zero1_specs,
+)
+from repro.training.train_state import TrainConfig, TrainState, make_train_step
+from repro.training import optimizer as opt_lib
+from repro.utils import tree_cast
+
+
+def model_loss_fn(cfg: ModelConfig):
+    from repro.models import encdec, lm
+
+    if cfg.family == "encdec":
+        return functools.partial(encdec.loss_fn, cfg=cfg)
+    return functools.partial(lm.loss_fn, cfg=cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPlan:
+    """Distribution plan for one (arch x shape x mesh) cell."""
+
+    param_mode: str = "replicated"  # replicated (dp) | fsdp (zero-sharded)
+    microbatch: int = 0
+    optimizer: str = "adamw"
+    # §Perf opt bundle (baseline False; see EXPERIMENTS.md §Perf)
+    fused_vg: bool = False    # one value_and_grad pass instead of two fwd
+    act_shard: bool = False   # pin residual activations to (dp, None, None)
+
+    @staticmethod
+    def choose(cfg: ModelConfig, shape: ShapeSpec, mesh) -> "RunPlan":
+        n_params = cfg.param_count()
+        model_par = mesh.shape.get("model", 1)
+        bf16_per_chip = 2 * n_params / model_par
+        # keep bf16 compute params under ~4 GiB/chip, else FSDP-gather
+        param_mode = "fsdp" if bf16_per_chip > 4e9 else "replicated"
+        # keep per-chip microbatch tokens <= 64k for train shapes
+        microbatch = 0
+        if shape.kind == "train":
+            dp = 1
+            for a in dp_axes(mesh):
+                dp *= mesh.shape[a]
+            per_dp_batch = max(1, shape.global_batch // dp)
+            tokens = per_dp_batch * shape.seq_len
+            budget = 32768 if n_params > 5e10 else 131072
+            while tokens > budget and per_dp_batch > 1:
+                per_dp_batch //= 2
+                tokens = per_dp_batch * shape.seq_len
+            microbatch = per_dp_batch * dp
+            if microbatch >= shape.global_batch:
+                microbatch = 0
+        return RunPlan(param_mode=param_mode, microbatch=microbatch)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     plan: RunPlan | None = None,
+                     train_overrides: dict | None = None):
+    """Returns (jit_step, state_shapes, batch_specs_tree, plan)."""
+    import dataclasses as _dc
+
+    from repro.launch.specs import params_shape, train_inputs
+
+    plan = plan or RunPlan.choose(cfg, shape, mesh)
+    tcfg = TrainConfig(microbatch=plan.microbatch, optimizer=plan.optimizer,
+                       fused_value_grad=plan.fused_vg)
+    if train_overrides:
+        tcfg = _dc.replace(tcfg, **train_overrides)
+    pshape = params_shape(cfg)
+    pspecs = tree_param_specs(pshape, mesh)
+    zspecs = tree_zero1_specs(pshape, mesh)
+    compute_specs = zspecs if plan.param_mode == "fsdp" else pspecs
+
+    loss = model_loss_fn(cfg)
+
+    def constrained_loss(params, batch):
+        params = jax.lax.with_sharding_constraint(
+            params, to_shardings(compute_specs, mesh)
+        )
+        return loss(params, batch)
+
+    step_fn = make_train_step(constrained_loss, tcfg)
+    if plan.act_shard:
+        from repro.distribution.act_sharding import activation_sharding
+
+        dp = dp_axes(mesh)
+        raw_step = step_fn
+
+        def step_fn(state, batch):  # context active at trace time
+            with activation_sharding(P(dp if len(dp) > 1 else dp[0], None, None), mesh):
+                return raw_step(state, batch)
+
+    # state shapes/specs
+    state_shape = jax.eval_shape(
+        lambda p: TrainState(
+            master=p,
+            opt=opt_lib.adamw_init(p) if plan.optimizer == "adamw"
+            else opt_lib.adafactor_init(p),
+            step=jnp.zeros((), jnp.int32),
+        ),
+        pshape,
+    )
+    from repro.training.train_state import _opt_leaf_specs
+
+    opt_specs = type(state_shape.opt)(*[
+        _opt_leaf_specs(getattr(state_shape.opt, f), pshape, mesh)
+        for f in state_shape.opt._fields
+    ])
+    state_specs = TrainState(master=zspecs, opt=opt_specs, step=P())
+
+    binputs = train_inputs(cfg, shape)
+    bspec = batch_spec(mesh, shape.global_batch)
+    batch_specs = jax.tree.map(
+        lambda x: P(*(list(bspec)[:1] + [None] * (x.ndim - 1))), binputs
+    )
+
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(to_shardings(state_specs, mesh),
+                      to_shardings(batch_specs, mesh)),
+        out_shardings=(to_shardings(state_specs, mesh), None),
+        donate_argnums=(0,),
+    )
+    return jit_step, state_shape, batch_specs, plan
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       plan: RunPlan | None = None, *, seq_shard: bool = False):
+    """Prefill serve step.  ``seq_shard`` enables sequence-parallel prefill
+    (flow attention's O(d^2)-collective context parallelism)."""
+    from repro.launch.specs import params_shape, prefill_inputs
+    from repro.models import encdec, lm
+
+    plan = plan or RunPlan.choose(cfg, shape, mesh)
+    pshape = params_shape(cfg)
+    pspecs = tree_param_specs(pshape, mesh)
+    if plan.param_mode == "fsdp":
+        pspecs = tree_zero1_specs(pshape, mesh)
+
+    if cfg.family == "encdec":
+        def base_prefill(params, batch):
+            return encdec.encode(params, batch["frames"], cfg)
+    else:
+        def base_prefill(params, batch):
+            return lm.prefill(params, batch["inputs"], cfg, shape.seq_len)
+
+    if plan.act_shard or seq_shard:
+        from repro.distribution.act_sharding import activation_sharding
+
+        dp = dp_axes(mesh)
+        saxis = "model" if seq_shard else None
+
+        def prefill_fn(params, batch):
+            with activation_sharding(
+                P(dp if len(dp) > 1 else dp[0], saxis, None), mesh
+            ):
+                return base_prefill(params, batch)
+    else:
+        prefill_fn = base_prefill
+
+    binputs = prefill_inputs(cfg, shape)
+    bspec = batch_spec(mesh, shape.global_batch, seq_sharded=seq_shard)
+    batch_specs = jax.tree.map(
+        lambda x: P(*(list(bspec) + [None] * (x.ndim - 2))[: x.ndim]), binputs
+    )
+    jit_step = jax.jit(
+        prefill_fn,
+        in_shardings=(to_shardings(pspecs, mesh),
+                      to_shardings(batch_specs, mesh)),
+    )
+    return jit_step, pshape, batch_specs, plan
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      plan: RunPlan | None = None):
+    from repro.launch.specs import decode_inputs, params_shape
+    from repro.models import encdec, lm
+
+    plan = plan or RunPlan.choose(cfg, shape, mesh)
+    pshape = params_shape(cfg)
+    pspecs = tree_param_specs(pshape, mesh)
+    if plan.param_mode == "fsdp":
+        pspecs = tree_zero1_specs(pshape, mesh)
+
+    if cfg.family == "encdec":
+        def decode_fn(params, batch):
+            return encdec.decode_step(
+                params, batch["token"], batch["memory"], batch["caches"],
+                cfg, batch["pos"],
+            )
+    else:
+        def decode_fn(params, batch):
+            return lm.decode(params, batch["token"], batch["caches"], cfg,
+                             batch["pos"])
+
+    binputs = decode_inputs(cfg, shape)
+    bspec = batch_spec(mesh, shape.global_batch)
+    baxis = list(bspec)[0] if len(list(bspec)) else None
+
+    def spec_of(x):
+        if x.ndim == 0:
+            return P()
+        # batch-led tensors (token, caches, memory) shard dim0 over dp
+        if x.shape[0] == shape.global_batch:
+            return P(*([baxis] + [None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    batch_specs = jax.tree.map(spec_of, binputs)
+    jit_step = jax.jit(
+        decode_fn,
+        in_shardings=(to_shardings(pspecs, mesh),
+                      to_shardings(batch_specs, mesh)),
+    )
+    return jit_step, pshape, batch_specs, plan
+
+
+def abstract_batch(specs_tree):
+    """ShapeDtypeStructs for a batch-spec tree (identity: already SDS)."""
+    return specs_tree

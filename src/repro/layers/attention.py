@@ -1,0 +1,494 @@
+"""Unified attention layer: flow (the paper) / softmax / linear / local.
+
+One weight structure per arch; ``cfg.attention.kind`` switches the mechanism
+(Flow-Attention is a drop-in replacement — no extra parameters, paper §4.3).
+
+Modes:
+  * ``full``     — whole sequence, no cache (train / encoder).
+  * ``prefill``  — whole prompt, returns a decode cache.
+  * ``decode``   — one token + cache.
+
+Caches:
+  * flow/linear  — O(d^2) recurrent state (``core/decode.py``), constant in
+                   context length: this is why `long_500k` decode is cheap.
+  * softmax      — dense KV cache (B, Hkv, L, D) written at position t.
+  * local        — ring-buffer KV cache of window size W.
+  * MLA+softmax  — compressed latent cache (B, L, kv_lora+rope) with the
+                   absorbed-matmul decode form (DeepSeek-V2 §2.1).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.decode import FlowState, decode_step, init_state
+from repro.core.flow_attention import FlowConfig, flow_attention_causal, flow_attention_nc, phi_map
+from repro.layers.linear import dense, dense_init
+from repro.layers.rope import apply_mrope, apply_rope
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, Hkv, L, D)
+    v: Array  # (B, Hkv, L, Dv)
+    pos: Array  # (B,) int32 — tokens written per slot
+
+
+class LinearState(NamedTuple):
+    s: Array  # (B, Hkv, D, Dv)
+    z: Array  # (B, Hkv, D)
+    pos: Array  # (B,)
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (B, L, kv_lora)
+    k_rope: Array  # (B, L, rope_dim)
+    pos: Array  # (B,)
+
+
+def flow_cfg_of(cfg: ModelConfig, causal: bool) -> FlowConfig:
+    a = cfg.attention
+    return FlowConfig(
+        phi=a.phi,
+        causal=causal,
+        strict_causal=a.strict_causal,
+        use_competition=a.use_competition,
+        use_allocation=a.use_allocation,
+        chunk_size=a.chunk_size,
+        gqa_mode=a.gqa_mode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig) -> dict:
+    ks = KeySeq(key)
+    d, hd = cfg.d_model, cfg.dim_head
+    nq, nkv = cfg.n_heads, cfg.kv_heads
+    if cfg.mla is not None:
+        m = cfg.mla
+        qdim = nq * (m.nope_head_dim + m.rope_head_dim)
+        p = {
+            "kv_down": dense_init(ks(), d, m.kv_lora_rank + m.rope_head_dim),
+            "kv_up": dense_init(
+                ks(), m.kv_lora_rank, nq * (m.nope_head_dim + m.v_head_dim)
+            ),
+            "wo": dense_init(ks(), nq * m.v_head_dim, d),
+        }
+        if m.q_lora_rank:
+            p["q_down"] = dense_init(ks(), d, m.q_lora_rank)
+            p["q_up"] = dense_init(ks(), m.q_lora_rank, qdim)
+        else:
+            p["wq"] = dense_init(ks(), d, qdim)
+        return p
+    return {
+        "wq": dense_init(ks(), d, nq * hd),
+        "wk": dense_init(ks(), d, nkv * hd),
+        "wv": dense_init(ks(), d, nkv * hd),
+        "wo": dense_init(ks(), nq * hd, d),
+    }
+
+
+def _split_heads(x: Array, n_heads: int) -> Array:
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_heads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: Array) -> Array:
+    b, h, n, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d)
+
+
+# ---------------------------------------------------------------------------
+# QKV projections (standard + MLA)
+# ---------------------------------------------------------------------------
+def _project_qkv(params, x: Array, cfg: ModelConfig, positions):
+    """Returns per-head q, k, v with positional encoding applied."""
+    if cfg.mla is not None:
+        return _project_qkv_mla(params, x, cfg, positions)
+    from repro.distribution.act_sharding import constrain_heads
+
+    q = constrain_heads(_split_heads(dense(params["wq"], x), cfg.n_heads))
+    k = constrain_heads(_split_heads(dense(params["wk"], x), cfg.kv_heads))
+    v = constrain_heads(_split_heads(dense(params["wv"], x), cfg.kv_heads))
+    q, k = _apply_positions(q, k, cfg, positions)
+    return q, k, v
+
+
+def _apply_positions(q, k, cfg: ModelConfig, positions):
+    if positions is None or cfg.rope in ("none", "learned"):
+        return q, k
+    if cfg.rope == "rope":
+        return (
+            apply_rope(q, positions, theta=cfg.rope_theta),
+            apply_rope(k, positions, theta=cfg.rope_theta),
+        )
+    if cfg.rope == "mrope":
+        return (
+            apply_mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta),
+            apply_mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta),
+        )
+    raise ValueError(cfg.rope)
+
+
+def _project_qkv_mla(params, x: Array, cfg: ModelConfig, positions):
+    """DeepSeek-V2 MLA, decompressed form: per-head q/k = [nope | rope]."""
+    m = cfg.mla
+    nq = cfg.n_heads
+    if m.q_lora_rank:
+        q = dense(params["q_up"], dense(params["q_down"], x))
+    else:
+        q = dense(params["wq"], x)
+    q = _split_heads(q, nq)  # (B, H, N, nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+
+    ckv = dense(params["kv_down"], x)  # (B, N, kv_lora + rope)
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    kv = dense(params["kv_up"], c_kv)  # (B, N, nq*(nope+v))
+    kv = _split_heads(kv, nq)
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    k_rope = k_rope[:, None]  # single shared rope head (B,1,N,rope)
+
+    if positions is not None and cfg.rope != "none":
+        q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, theta=cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], m.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Mechanisms
+# ---------------------------------------------------------------------------
+def _softmax_attn(q, k, v, *, causal: bool, softcap: float = 0.0,
+                  q_offset: int | Array = 0, kv_len: Array | None = None) -> Array:
+    """GQA softmax attention; O(n*m).  q:(B,Hq,N,D) k,v:(B,Hkv,M,*)."""
+    b, hq, n, d = q.shape
+    hkv, m = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, n, d)
+    logits = jnp.einsum(
+        "bhgnd,bhmd->bhgnm", qg, k, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if causal:
+        qpos = jnp.arange(n) + q_offset
+        mask = qpos[:, None] >= jnp.arange(m)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(m)[None, :] < kv_len
+        logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgnm,bhme->bhgne", w, v)
+    return out.reshape(b, hq, n, -1)
+
+
+def _local_attn(q, k, v, *, window: int, softcap: float = 0.0) -> Array:
+    """Sliding-window causal attention (band mask), O(n*W) via chunking."""
+    b, hq, n, d = q.shape
+    if n <= window:
+        return _softmax_attn(q, k, v, causal=True, softcap=softcap)
+    # chunk into window-sized blocks; each attends to itself + previous block
+    hkv = k.shape[1]
+    w = window
+    assert n % w == 0, f"seq {n} must be divisible by window {w}"
+    nc = n // w
+    pad = lambda t: jnp.concatenate(
+        [jnp.zeros_like(t[:, :, :w]), t], axis=2
+    )
+    kp, vp = pad(k), pad(v)
+    qc = q.reshape(b, hq, nc, w, d)
+    kc = jnp.stack([kp[:, :, i * w : (i + 2) * w] for i in range(nc)], axis=2)
+    vc = jnp.stack([vp[:, :, i * w : (i + 2) * w] for i in range(nc)], axis=2)
+    g = hq // hkv
+    qg = qc.reshape(b, hkv, g, nc, w, d)
+    logits = jnp.einsum(
+        "bhgcnd,bhcmd->bhgcnm", qg, kc, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(w)[:, None] + w  # position within [prev | cur] band
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (qpos >= kpos) & (kpos > qpos - w)
+    first = jnp.arange(2 * w)[None, :] >= w  # first chunk's "prev" is padding
+    mask0 = mask & first
+    cmask = jnp.where(
+        (jnp.arange(nc) == 0)[:, None, None], mask0[None], mask[None]
+    )  # (nc, w, 2w)
+    logits = jnp.where(cmask[None, None, None], logits, -1e30)
+    wts = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgcnm,bhcme->bhgcne", wts, vc)
+    return out.reshape(b, hq, n, -1)
+
+
+def _linear_attn(q, k, v, *, causal: bool, phi: str = "elu1",
+                 chunk_size: int = 128, eps: float = 1e-6) -> Array:
+    """Katharopoulos et al. linear attention — the paper's ablation baseline."""
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    pq = phi_map(q.astype(jnp.float32), phi)
+    pk = phi_map(k.astype(jnp.float32), phi)
+    vf = v.astype(jnp.float32)
+    if causal:
+        from repro.core.flow_attention import _causal_dot
+
+        num = _causal_dot(pq, pk, vf, chunk_size)
+        den = jnp.einsum("bhnd,bhnd->bhn", pq, jnp.cumsum(pk, axis=2))
+    else:
+        kv = jnp.einsum("bhmd,bhme->bhde", pk, vf)
+        num = jnp.einsum("bhnd,bhde->bhne", pq, kv)
+        den = jnp.einsum("bhnd,bhd->bhn", pq, pk.sum(axis=2))
+    return (num / (den[..., None] + eps)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer entry points
+# ---------------------------------------------------------------------------
+def attention(
+    params,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool,
+    positions: Array | None = None,
+    kv_input: Array | None = None,  # cross-attention memory (enc-dec)
+) -> Array:
+    """Full-sequence attention (train / encode).  x: (B, N, d_model)."""
+    kind = cfg.attention.kind
+    from repro.distribution.act_sharding import constrain_heads
+
+    src = x if kv_input is None else kv_input
+    if cfg.mla is None:
+        q = constrain_heads(_split_heads(dense(params["wq"], x), cfg.n_heads))
+        k = constrain_heads(_split_heads(dense(params["wk"], src), cfg.kv_heads))
+        v = constrain_heads(_split_heads(dense(params["wv"], src), cfg.kv_heads))
+        if kv_input is None:
+            q, k = _apply_positions(q, k, cfg, positions)
+    else:
+        assert kv_input is None, "MLA cross-attention not used by any arch"
+        q, k, v = _project_qkv_mla(params, x, cfg, positions)
+
+    if kind == "flow":
+        fc = flow_cfg_of(cfg, causal)
+        out = (
+            flow_attention_causal(q, k, v, fc)
+            if causal
+            else flow_attention_nc(q, k, v, fc)
+        )
+    elif kind == "softmax":
+        out = _softmax_attn(q, k, v, causal=causal, softcap=cfg.attention.softcap)
+    elif kind == "local":
+        out = _local_attn(q, k, v, window=cfg.attention.window,
+                          softcap=cfg.attention.softcap)
+    elif kind == "linear":
+        out = _linear_attn(q, k, v, causal=causal, phi="elu1",
+                           chunk_size=cfg.attention.chunk_size)
+    else:
+        raise ValueError(kind)
+    return dense(params["wo"], _merge_heads(out))
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode-cache for one layer."""
+    kind = cfg.attention.kind
+    hd, nkv = cfg.dim_head, cfg.kv_heads
+    if cfg.mla is not None:
+        m = cfg.mla
+        if kind == "flow":
+            return init_state(batch, cfg.n_heads, m.nope_head_dim + m.rope_head_dim,
+                              m.v_head_dim)
+        return MLACache(
+            c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+    if kind == "flow":
+        return init_state(batch, nkv, hd, hd)
+    if kind == "linear":
+        return LinearState(
+            s=jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+            z=jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+    win = cfg.attention.window if kind == "local" else max_len
+    cache_len = min(win, max_len) if kind == "local" else max_len
+    return KVCache(
+        k=jnp.zeros((batch, nkv, cache_len, hd), dtype),
+        v=jnp.zeros((batch, nkv, cache_len, hd), dtype),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def attention_decode(
+    params,
+    x: Array,
+    cache,
+    cfg: ModelConfig,
+    *,
+    positions: Array | None = None,
+):
+    """One-token decode.  x: (B, 1, d_model) -> (out, new_cache)."""
+    kind = cfg.attention.kind
+    if cfg.mla is not None and kind != "flow":
+        return _mla_decode_absorbed(params, x, cache, cfg, positions)
+
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    if kind == "flow":
+        fc = flow_cfg_of(cfg, causal=True)
+        new_state, out = decode_step(cache, q, k, v, fc)
+        return dense(params["wo"], _merge_heads(out)), new_state
+    if kind == "linear":
+        pq = phi_map(q.astype(jnp.float32), "elu1")[:, :, 0]
+        pk = phi_map(k.astype(jnp.float32), "elu1")[:, :, 0]
+        if cfg.n_heads != cfg.kv_heads:
+            rep = cfg.n_heads // cfg.kv_heads
+            pk = jnp.repeat(pk, rep, axis=1)
+            vv = jnp.repeat(v, rep, axis=1)
+        else:
+            vv = v
+        s = cache.s + jnp.einsum("bhd,bhe->bhde", pk, vv[:, :, 0].astype(jnp.float32))
+        z = cache.z + pk
+        num = jnp.einsum("bhd,bhde->bhe", pq, s)
+        den = jnp.einsum("bhd,bhd->bh", pq, z) + 1e-6
+        out = (num / den[..., None])[:, :, None].astype(x.dtype)
+        return dense(params["wo"], _merge_heads(out)), LinearState(s, z, cache.pos + 1)
+
+    # softmax / local: write to (ring) cache then attend.  pos is per
+    # slot, so writes scatter at each row's own index (continuous batching).
+    t = cache.pos  # (B,)
+    b = x.shape[0]
+    cache_len = cache.k.shape[2]
+    idx = t % cache_len if kind == "local" else jnp.minimum(t, cache_len - 1)
+    rows = jnp.arange(b)
+    kc = cache.k.at[rows, :, idx].set(k[:, :, 0].astype(cache.k.dtype))
+    vc = cache.v.at[rows, :, idx].set(v[:, :, 0].astype(cache.v.dtype))
+    kv_len = jnp.minimum(t + 1, cache_len)  # (B,)
+    out = _softmax_attn(
+        q, kc, vc, causal=False, softcap=cfg.attention.softcap,
+        kv_len=kv_len[:, None],
+    )
+    return dense(params["wo"], _merge_heads(out)), KVCache(kc, vc, t + 1)
+
+
+def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions):
+    """MLA decode on the compressed cache (absorbed matmuls, DeepSeek-V2)."""
+    m = cfg.mla
+    nq = cfg.n_heads
+    b = x.shape[0]
+    if m.q_lora_rank:
+        q = dense(params["q_up"], dense(params["q_down"], x))
+    else:
+        q = dense(params["wq"], x)
+    q = _split_heads(q, nq)  # (B,H,1,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+
+    ckv_t = dense(params["kv_down"], x)  # (B,1,kv_lora+rope)
+    c_t, krope_t = jnp.split(ckv_t, [m.kv_lora_rank], axis=-1)
+    if positions is not None and cfg.rope != "none":
+        q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+        krope_t = apply_rope(krope_t[:, None], positions, theta=cfg.rope_theta)[:, 0]
+
+    t = cache.pos  # (B,)
+    rows = jnp.arange(b)
+    idx = jnp.minimum(t, cache.c_kv.shape[1] - 1)
+    c_kv = cache.c_kv.at[rows, idx].set(c_t[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[rows, idx].set(
+        krope_t[:, 0].astype(cache.k_rope.dtype)
+    )
+
+    # absorb kv_up into the query:  W_up maps kv_lora -> H*(nope+v)
+    w_up = params["kv_up"]["w"].reshape(m.kv_lora_rank, nq, m.nope_head_dim + m.v_head_dim)
+    w_uk = w_up[:, :, : m.nope_head_dim]  # (lora, H, nope)
+    w_uv = w_up[:, :, m.nope_head_dim :]  # (lora, H, v)
+    q_abs = jnp.einsum("bhnd,lhd->bhnl", q_nope, w_uk.astype(q_nope.dtype))
+    scores = jnp.einsum(
+        "bhnl,bml->bhnm", q_abs, c_kv.astype(q_abs.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    scores += jnp.einsum(
+        "bhnd,bmd->bhnm", q_rope, k_rope.astype(q_rope.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= t[:, None]
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhnm,bml->bhnl", w, c_kv)  # (B,H,1,lora)
+    out = jnp.einsum("bhnl,lhe->bhne", ctx, w_uv.astype(ctx.dtype))
+    return dense(params["wo"], _merge_heads(out)), MLACache(c_kv, k_rope, t + 1)
+
+
+def attention_prefill(
+    params, x: Array, cfg: ModelConfig, max_len: int, *,
+    positions: Array | None = None,
+):
+    """Prompt prefill returning (out, cache) for subsequent decode."""
+    kind = cfg.attention.kind
+    b, n, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if kind == "flow":
+        fc = flow_cfg_of(cfg, causal=True)
+        fc = FlowConfig(**{**fc.__dict__, "strict_causal": True})
+        out, state = flow_attention_causal(q, k, v, fc, return_state=True)
+        return dense(params["wo"], _merge_heads(out)), state
+    if kind == "linear":
+        out = _linear_attn(q, k, v, causal=True, chunk_size=cfg.attention.chunk_size)
+        hq = cfg.n_heads
+        if hq != cfg.kv_heads:
+            k = jnp.repeat(k, hq // cfg.kv_heads, axis=1)
+            v = jnp.repeat(v, hq // cfg.kv_heads, axis=1)
+        pk = phi_map(k.astype(jnp.float32), "elu1")
+        s = jnp.einsum("bhnd,bhne->bhde", pk, v.astype(jnp.float32))
+        z = pk.sum(axis=2)
+        return dense(params["wo"], _merge_heads(out)), LinearState(
+            s, z, jnp.full((b,), n, jnp.int32)
+        )
+    if kind == "local":
+        out = _local_attn(q, k, v, window=cfg.attention.window,
+                          softcap=cfg.attention.softcap)
+        w = min(cfg.attention.window, max_len)
+        # keep the last `w` positions in the ring buffer, aligned to n % w
+        kc = jnp.zeros((b, cfg.kv_heads, w, cfg.dim_head), k.dtype)
+        vc = jnp.zeros_like(kc)
+        take = min(w, n)
+        ks_, vs_ = k[:, :, -take:], v[:, :, -take:]
+        start = (n - take) % w
+        rolled_idx = (start + jnp.arange(take)) % w
+        kc = kc.at[:, :, rolled_idx].set(ks_)
+        vc = vc.at[:, :, rolled_idx].set(vs_)
+        return dense(params["wo"], _merge_heads(out)), KVCache(
+            kc, vc, jnp.full((b,), n, jnp.int32)
+        )
+    # softmax: dense cache
+    out = _softmax_attn(q, k, v, causal=True, softcap=cfg.attention.softcap)
+    if cfg.mla is not None:
+        # recompute compressed latents for the cache (cheap: one matmul)
+        ckv = dense(params["kv_down"], x)
+        c_kv, k_rope = jnp.split(ckv, [cfg.mla.kv_lora_rank], axis=-1)
+        if positions is not None and cfg.rope != "none":
+            k_rope = apply_rope(k_rope[:, None], positions, theta=cfg.rope_theta)[:, 0]
+        pad = max_len - n
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        return dense(params["wo"], _merge_heads(out)), MLACache(
+            c_kv.astype(jnp.bfloat16), k_rope.astype(jnp.bfloat16),
+            jnp.full((b,), n, jnp.int32),
+        )
+    pad = max_len - n
+    kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
+    vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
+    return dense(params["wo"], _merge_heads(out)), KVCache(
+        kc, vc, jnp.full((b,), n, jnp.int32)
+    )

@@ -1,0 +1,38 @@
+"""Feed-forward blocks: squared-ReLU (Nemotron), SwiGLU (llama), GELU/ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.linear import dense, dense_init
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+def ffn_init(key, d_model: int, d_ff: int, act: str) -> dict:
+    ks = KeySeq(key)
+    p = {
+        "w_in": dense_init(ks(), d_model, d_ff),
+        "w_out": dense_init(ks(), d_ff, d_model),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks(), d_model, d_ff)
+    return p
+
+
+def ffn(params, x: Array, act: str) -> Array:
+    from repro.distribution.act_sharding import constrain_ffn_hidden
+
+    h = constrain_ffn_hidden(dense(params["w_in"], x))
+    if act == "swiglu":
+        h = jax.nn.silu(constrain_ffn_hidden(dense(params["w_gate"], x))) * h
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(act)
+    return dense(params["w_out"], h)

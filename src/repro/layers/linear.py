@@ -1,0 +1,24 @@
+"""Dense layers on raw param pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_normal
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float = 1.0):
+    p = {"w": lecun_normal(key, (d_in, d_out)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params, x: Array) -> Array:
+    w = params["w"].astype(x.dtype)
+    y = jnp.einsum("...i,io->...o", x, w, preferred_element_type=jnp.float32)
+    if "b" in params:
+        y = y + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)

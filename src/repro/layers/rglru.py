@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)            recurrence gate (block-diagonal proj)
+    i_t = sigmoid(W_x x_t)            input gate      (block-diagonal proj)
+    log a_t = -c * r_t * softplus(Lambda)          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent block: two input projections, a short
+causal depthwise conv on the recurrent branch, GeLU gating on the other,
+and an output projection.  The diagonal recurrence runs as a Blelchoch
+associative scan (TPU log-depth); decode carries (h, conv ring buffer).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.linear import dense, dense_init
+from repro.utils import KeySeq, lecun_normal
+
+Array = jax.Array
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array  # (B, W) recurrent state
+    conv: Array  # (B, conv_width-1, W) trailing inputs for causal conv
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    ks = KeySeq(key)
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    nb = cfg.rglru.n_blocks
+    bw = w // nb
+    return {
+        "w_x": dense_init(ks(), d, w),
+        "w_gate": dense_init(ks(), d, w),
+        "conv_w": lecun_normal(ks(), (cfg.rglru.conv_width, w)) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": lecun_normal(ks(), (nb, bw, bw)),
+        "gate_x": lecun_normal(ks(), (nb, bw, bw)),
+        # Lambda init so that a = sigmoid(Lambda)^c spans ~(0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, w) ** (-1.0 / _C) - 1.0
+        )),
+        "w_out": dense_init(ks(), w, d),
+    }
+
+
+def _block_proj(w_blocks: Array, x: Array) -> Array:
+    """Block-diagonal projection: x (..., W) with W = nb*bw."""
+    nb, bw, _ = w_blocks.shape
+    xs = x.reshape(*x.shape[:-1], nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w_blocks.astype(x.dtype))
+    return y.reshape(*x.shape)
+
+
+def _causal_conv(x: Array, w: Array, b: Array, history: Array | None = None):
+    """Depthwise causal conv along time.  x: (B, N, W); w: (K, W)."""
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, N+K-1, W)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k)
+    )
+    return y + b.astype(x.dtype), xp[:, -(k - 1) :]
+
+
+def _rglru_gates(params, xc: Array):
+    r = jax.nn.sigmoid(_block_proj(params["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_proj(params["gate_x"], xc).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"])  # (B, N, W) fp32
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    # sqrt(1 - a^2) input normalizer (Griffin eq. 5), stable via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * gated_x
+
+
+def rglru_block(params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Griffin recurrent block.  x: (B, N, d_model)."""
+    xb = dense(params["w_x"], x)
+    gb = jax.nn.gelu(dense(params["w_gate"], x))
+    xc, _ = _causal_conv(xb, params["conv_w"], params["conv_b"])
+    a, b = _rglru_gates(params, xc)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    return dense(params["w_out"], h * gb)
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> RGLRUState:
+    w = cfg.rglru.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.rglru.conv_width - 1, w), jnp.bfloat16),
+    )
+
+
+def rglru_prefill(params, x: Array, cfg: ModelConfig):
+    xb = dense(params["w_x"], x)
+    gb = jax.nn.gelu(dense(params["w_gate"], x))
+    xc, hist = _causal_conv(xb, params["conv_w"], params["conv_b"])
+    a, b = _rglru_gates(params, xc)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = dense(params["w_out"], h.astype(x.dtype) * gb)
+    return out, RGLRUState(h=h[:, -1], conv=hist.astype(jnp.bfloat16))
+
+
+def rglru_decode(params, x: Array, state: RGLRUState, cfg: ModelConfig):
+    """One-token decode.  x: (B, 1, d_model)."""
+    xb = dense(params["w_x"], x)
+    gb = jax.nn.gelu(dense(params["w_gate"], x))
+    xc, hist = _causal_conv(xb, params["conv_w"], params["conv_b"],
+                            history=state.conv)
+    a, b = _rglru_gates(params, xc)
+    h = a[:, 0] * state.h + b[:, 0]
+    out = dense(params["w_out"], h[:, None].astype(x.dtype) * gb)
+    return out, RGLRUState(h=h, conv=hist.astype(jnp.bfloat16))

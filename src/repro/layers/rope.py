@@ -1,0 +1,73 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head dim's frequency bands into
+(temporal, height, width) sections and rotates each with its own position
+stream; text tokens carry identical (t,h,w) positions and reduce to RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: Array, positions: Array, *, theta: float = 10_000.0
+) -> Array:
+    """x: (B, H, N, D); positions: (B, N) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,N,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array,
+    positions: Array,
+    sections: tuple[int, ...],
+    *,
+    theta: float = 10_000.0,
+) -> Array:
+    """x: (B, H, N, D); positions: (B, 3, N) int32 — (t, h, w) streams.
+
+    ``sections`` gives the number of frequency pairs per stream and must sum
+    to D/2 (e.g. (16, 24, 24) for D=128)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    # stream id per frequency band
+    stream = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (D/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(stream[None, :, None], (x.shape[0], d // 2, positions.shape[-1])),
+        axis=1,
+    )  # (B, D/2, N)
+    angles = jnp.moveaxis(pos, 1, -1)[:, None] * freqs  # (B,1,N,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def default_positions(batch: int, n: int, offset: Array | int = 0) -> Array:
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 1:  # per-slot offsets (continuous batching)
+        off = off[:, None]
+    return (jnp.arange(n, dtype=jnp.int32)[None, :] + off
+            + jnp.zeros((batch, 1), jnp.int32))
+
+
+def default_mrope_positions(batch: int, n: int, offset: Array | int = 0) -> Array:
+    p = default_positions(batch, n, offset)
+    return jnp.broadcast_to(p[:, None, :], (batch, 3, n))

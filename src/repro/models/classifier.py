@@ -1,0 +1,75 @@
+"""Encoder classifier — LRA (§4.1) and UEA time-series (§4.4) harness model.
+
+Token or continuous inputs -> non-causal encoder blocks -> mean pool ->
+linear head.  ``cfg.attention.kind`` selects flow / softmax / linear
+(the Tab. 2 / Tab. 6 comparisons)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.attention import attention, attn_init
+from repro.layers.embeddings import embed, embedding_init
+from repro.layers.ffn import ffn, ffn_init
+from repro.layers.linear import dense, dense_init
+from repro.layers.norms import apply_norm, norm_init
+from repro.layers.rope import default_positions
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+def init(key, cfg: ModelConfig, *, n_classes: int, in_dim: int = 0) -> dict:
+    """``in_dim > 0``: continuous inputs (time series); else token inputs."""
+    ks = KeySeq(key)
+    d = cfg.d_model
+    p: dict = {}
+    if in_dim:
+        p["in_proj"] = dense_init(ks(), in_dim, d)
+    else:
+        p["embed"] = embedding_init(ks(), cfg.vocab_size, d)
+    blocks = []
+    for _ in range(cfg.n_layers):
+        ks2 = KeySeq(ks())
+        blocks.append({
+            "norm1": norm_init(d, cfg.norm),
+            "attn": attn_init(ks2(), cfg),
+            "norm2": norm_init(d, cfg.norm),
+            "ffn": ffn_init(ks2(), d, cfg.d_ff, cfg.act),
+        })
+    p["blocks"] = blocks
+    p["final_norm"] = norm_init(d, cfg.norm)
+    p["head"] = dense_init(ks(), d, n_classes, bias=True)
+    return p
+
+
+def forward(params, inputs: Array, cfg: ModelConfig, *,
+            mask: Array | None = None, dtype=jnp.bfloat16) -> Array:
+    b, n = inputs.shape[0], inputs.shape[1]
+    if "in_proj" in params:
+        x = dense(params["in_proj"], inputs.astype(dtype))
+    else:
+        x = embed(params["embed"], inputs, dtype)
+    positions = default_positions(b, n)
+    for bp in params["blocks"]:
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        x = x + attention(bp["attn"], h, cfg, causal=False, positions=positions)
+        x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if mask is not None:
+        w = mask.astype(jnp.float32)[..., None]
+        pooled = (x.astype(jnp.float32) * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+    else:
+        pooled = x.astype(jnp.float32).mean(axis=1)
+    return dense(params["head"], pooled.astype(dtype)).astype(jnp.float32)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    logits = forward(params, batch["inputs"], cfg, mask=batch.get("mask"),
+                     dtype=dtype)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).astype(jnp.float32).mean()
+    return ce, {"loss": ce, "acc": acc}

@@ -1,0 +1,77 @@
+"""Decision-Flowformer — Decision Transformer backbone (D4RL §4.5).
+
+Trajectory tokens (return-to-go, state, action) are embedded per modality,
+interleaved into a causal sequence of length 3*T, and run through a causal
+Flowformer (3 layers, 256 hidden, 4 heads in the paper).  The action head
+reads the state-token positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.attention import attention, attn_init
+from repro.layers.embeddings import embedding_init
+from repro.layers.ffn import ffn, ffn_init
+from repro.layers.linear import dense, dense_init
+from repro.layers.norms import apply_norm, norm_init
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+def init(key, cfg: ModelConfig, *, state_dim: int, action_dim: int,
+         max_ep_len: int = 1000) -> dict:
+    ks = KeySeq(key)
+    d = cfg.d_model
+    blocks = []
+    for _ in range(cfg.n_layers):
+        ks2 = KeySeq(ks())
+        blocks.append({
+            "norm1": norm_init(d, cfg.norm),
+            "attn": attn_init(ks2(), cfg),
+            "norm2": norm_init(d, cfg.norm),
+            "ffn": ffn_init(ks2(), d, cfg.d_ff, cfg.act),
+        })
+    return {
+        "embed_rtg": dense_init(ks(), 1, d),
+        "embed_state": dense_init(ks(), state_dim, d),
+        "embed_action": dense_init(ks(), action_dim, d),
+        "embed_t": embedding_init(ks(), max_ep_len, d),
+        "blocks": blocks,
+        "final_norm": norm_init(d, cfg.norm),
+        "action_head": dense_init(ks(), d, action_dim, bias=True),
+    }
+
+
+def forward(params, rtg: Array, states: Array, actions: Array,
+            timesteps: Array, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """rtg: (B,T,1); states: (B,T,S); actions: (B,T,A); timesteps: (B,T).
+
+    Returns predicted actions (B, T, A) read at state positions."""
+    b, t, _ = states.shape
+    te = params["embed_t"]["table"][timesteps].astype(dtype)  # (B,T,d)
+    er = dense(params["embed_rtg"], rtg.astype(dtype)) + te
+    es = dense(params["embed_state"], states.astype(dtype)) + te
+    ea = dense(params["embed_action"], actions.astype(dtype)) + te
+    # interleave (r_t, s_t, a_t)
+    x = jnp.stack([er, es, ea], axis=2).reshape(b, 3 * t, cfg.d_model)
+    for bp in params["blocks"]:
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        x = x + attention(bp["attn"], h, cfg, causal=True)
+        x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    state_tokens = x.reshape(b, t, 3, cfg.d_model)[:, :, 1]
+    return jnp.tanh(dense(params["action_head"], state_tokens)).astype(jnp.float32)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    pred = forward(params, batch["rtg"], batch["states"], batch["actions_in"],
+                   batch["timesteps"], cfg, dtype=dtype)
+    target = batch["actions"]
+    mask = batch.get("mask", jnp.ones(target.shape[:2], jnp.float32))
+    mse = (jnp.square(pred - target).mean(-1) * mask).sum() / jnp.maximum(
+        mask.sum(), 1.0
+    )
+    return mse, {"loss": mse}

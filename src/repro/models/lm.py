@@ -1,0 +1,343 @@
+"""Decoder-only language model: dense / MoE / hybrid (RG-LRU) / SSM (SSD).
+
+Layer stacking uses ``lax.scan`` over repeats of the block *pattern* (one
+period = e.g. ("rglru", "rglru", "attn") for RecurrentGemma) with stacked
+parameters, keeping HLO size O(pattern) instead of O(layers); remainder
+layers run unrolled.  Remat wraps each period when ``cfg.remat``.
+
+Entry points:
+  init / forward / loss_fn            training
+  init_caches / prefill / decode      serving (flow state or KV cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.attention import (
+    attention,
+    attention_decode,
+    attention_prefill,
+    attn_cache_init,
+    attn_init,
+)
+from repro.layers.embeddings import embed, embedding_init, unembed
+from repro.layers.ffn import ffn, ffn_init
+from repro.layers.moe import moe, moe_init
+from repro.layers.norms import apply_norm, norm_init
+from repro.layers.rglru import (
+    rglru_block,
+    rglru_decode,
+    rglru_init,
+    rglru_prefill,
+    rglru_state_init,
+)
+from repro.layers.rope import default_mrope_positions, default_positions
+from repro.layers.ssd import (
+    ssd_block,
+    ssd_decode,
+    ssd_init,
+    ssd_prefill,
+    ssd_state_init,
+)
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+def _block_init(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = KeySeq(key)
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        p = {"norm1": norm_init(d, cfg.norm), "attn": attn_init(ks(), cfg)}
+    elif kind == "rglru":
+        p = {"norm1": norm_init(d, cfg.norm), "rglru": rglru_init(ks(), cfg)}
+    elif kind == "ssd":
+        p = {"norm1": norm_init(d, cfg.norm), "ssd": ssd_init(ks(), cfg)}
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0 and kind != "ssd":
+        p["norm2"] = norm_init(d, cfg.norm)
+        if cfg.moe is not None:
+            p["moe"] = moe_init(ks(), d, cfg.d_ff, cfg.act, cfg.moe)
+        else:
+            p["ffn"] = ffn_init(ks(), d, cfg.d_ff, cfg.act)
+    return p
+
+
+def _mixer(params, x, kind: str, cfg: ModelConfig, positions):
+    if kind in ("attn", "local"):
+        sub = dataclass_replace_attn(cfg, kind)
+        return attention(params["attn"], x, sub, causal=True, positions=positions)
+    if kind == "rglru":
+        return rglru_block(params["rglru"], x, cfg)
+    if kind == "ssd":
+        return ssd_block(params["ssd"], x, cfg)
+    raise ValueError(kind)
+
+
+@functools.lru_cache(maxsize=64)
+def _local_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    # hybrid archs run "local" slots as local attention under softmax mode,
+    # and as flow attention in flow mode (the paper's replacement)
+    if cfg.attention.kind == "flow":
+        return cfg
+    att = dataclasses.replace(cfg.attention, kind="local")
+    return dataclasses.replace(cfg, attention=att)
+
+
+def dataclass_replace_attn(cfg: ModelConfig, kind: str) -> ModelConfig:
+    if kind == "local":
+        return _local_cfg(cfg)
+    return cfg
+
+
+def _block_apply(params, x, kind: str, cfg: ModelConfig, positions):
+    from repro.distribution.act_sharding import constrain_residual
+
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    x = constrain_residual(x + _mixer(params, h, kind, cfg, positions))
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in params:
+        x = x + ffn(params["ffn"], apply_norm(params["norm2"], x, cfg.norm), cfg.act)
+    elif "moe" in params:
+        y, aux = moe(params["moe"], apply_norm(params["norm2"], x, cfg.norm),
+                     cfg.act, cfg.moe)
+        x = x + y
+    return constrain_residual(x), aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+def init(key, cfg: ModelConfig) -> dict:
+    ks = KeySeq(key)
+    p: dict[str, Any] = {}
+    if cfg.embedding_frontend == "tokens":
+        p["embed"] = embedding_init(ks(), cfg.vocab_size, cfg.d_model)
+    else:  # stub frontend: inputs are precomputed embeddings
+        p["embed"] = embedding_init(ks(), cfg.vocab_size, cfg.d_model)
+
+    period = len(cfg.pattern)
+    n_rep, tail = divmod(cfg.n_layers, period)
+    if cfg.scan_layers and n_rep > 1:
+        p["scan"] = []
+        for j, kind in enumerate(cfg.pattern):
+            keys = jnp.stack(ks.split(n_rep))
+            p["scan"].append(jax.vmap(lambda k: _block_init(k, kind, cfg))(keys))
+        p["tail"] = [
+            _block_init(ks(), cfg.block_kind(n_rep * period + i), cfg)
+            for i in range(tail)
+        ]
+    else:
+        p["blocks"] = [
+            _block_init(ks(), cfg.block_kind(i), cfg) for i in range(cfg.n_layers)
+        ]
+    p["final_norm"] = norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        p["head"] = embedding_init(ks(), cfg.vocab_size, cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, inputs: Array, cfg: ModelConfig, dtype) -> Array:
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        return embed(params["embed"], inputs, dtype)
+    return inputs.astype(dtype)  # stub frontend: precomputed embeddings
+
+
+def forward(
+    params,
+    inputs: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array | None = None,
+    dtype=jnp.bfloat16,
+):
+    """inputs: int tokens (B, N) or stub embeddings (B, N, d).
+
+    Returns (logits (B, N, vocab) fp32, aux_loss scalar)."""
+    b = inputs.shape[0]
+    n = inputs.shape[1]
+    x = _embed_inputs(params, inputs, cfg, dtype)
+    if positions is None:
+        positions = (
+            default_mrope_positions(b, n) if cfg.rope == "mrope"
+            else default_positions(b, n)
+        )
+
+    period = len(cfg.pattern)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if "scan" in params:
+        n_rep = jax.tree.leaves(params["scan"][0])[0].shape[0]
+
+        def period_body(x, layer_params):
+            aux = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(cfg.pattern):
+                x, a = _block_apply(layer_params[j], x, kind, cfg, positions)
+                aux = aux + a
+            return x, aux
+
+        if cfg.remat:
+            period_body = jax.checkpoint(period_body)
+
+        def scan_body(carry, layer_params):
+            x, aux = carry
+            x, a = period_body(x, layer_params)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_body, (x, aux_total), tuple(params["scan"])
+        )
+        for i, bp in enumerate(params["tail"]):
+            kind = cfg.block_kind(n_rep * period + i)
+            x, a = _block_apply(bp, x, kind, cfg, positions)
+            aux_total = aux_total + a
+    else:
+        for i, bp in enumerate(params["blocks"]):
+            kind = cfg.block_kind(i)
+            f = functools.partial(_block_apply, kind=kind, cfg=cfg,
+                                  positions=positions)
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            x, a = f(bp, x)
+            aux_total = aux_total + a
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x, softcap=cfg.logit_softcap)
+    return logits, aux_total
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """batch: {"inputs": tokens/embeds, "targets": (B,N) int, "mask": (B,N)}."""
+    logits, aux = forward(params, batch["inputs"], cfg, dtype=dtype,
+                          positions=batch.get("positions"))
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    loss = ce + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux,
+               "ppl": jnp.exp(jnp.minimum(ce, 20.0)), "tokens": mask.sum()}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    caches = []
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        if kind in ("attn", "local"):
+            sub = dataclass_replace_attn(cfg, kind)
+            caches.append(attn_cache_init(sub, batch, max_len))
+        elif kind == "rglru":
+            caches.append(rglru_state_init(cfg, batch))
+        elif kind == "ssd":
+            caches.append(ssd_state_init(cfg, batch))
+    return caches
+
+
+def _blocks_list(params, cfg: ModelConfig):
+    """Yield per-layer params in order, unstacking scanned groups."""
+    if "blocks" in params:
+        yield from params["blocks"]
+        return
+    n_rep = jax.tree.leaves(params["scan"][0])[0].shape[0]
+    for r in range(n_rep):
+        for j in range(len(cfg.pattern)):
+            yield jax.tree.map(lambda x: x[r], params["scan"][j])
+    yield from params["tail"]
+
+
+def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
+            *, dtype=jnp.bfloat16):
+    """Consume a prompt; return (last-token logits, caches)."""
+    b, n = inputs.shape[0], inputs.shape[1]
+    x = _embed_inputs(params, inputs, cfg, dtype)
+    positions = (default_mrope_positions(b, n) if cfg.rope == "mrope"
+                 else default_positions(b, n))
+    caches = []
+    for i, bp in enumerate(_blocks_list(params, cfg)):
+        kind = cfg.block_kind(i)
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        if kind in ("attn", "local"):
+            sub = dataclass_replace_attn(cfg, kind)
+            y, cache = attention_prefill(bp["attn"], h, sub, max_len,
+                                         positions=positions)
+        elif kind == "rglru":
+            y, cache = rglru_prefill(bp["rglru"], h, cfg)
+        else:
+            y, cache = ssd_prefill(bp["ssd"], h, cfg)
+        caches.append(cache)
+        x = x + y
+        if "ffn" in bp:
+            x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+        elif "moe" in bp:
+            y2, _ = moe(bp["moe"], apply_norm(bp["norm2"], x, cfg.norm),
+                        cfg.act, cfg.moe)
+            x = x + y2
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x[:, -1:], softcap=cfg.logit_softcap)
+    return logits, caches
+
+
+def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
+           *, dtype=jnp.bfloat16):
+    """One decode step.  token: (B, 1) int or (B, 1, d) stub embedding.
+
+    pos: () or (B,) int32 — absolute position(s) of this token (per-slot
+    under continuous batching).
+    Returns (logits (B,1,vocab), new_caches)."""
+    b = token.shape[0]
+    x = _embed_inputs(params, token, cfg, dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    positions = (
+        default_mrope_positions(b, 1, pos) if cfg.rope == "mrope"
+        else default_positions(b, 1, pos)
+    )
+    new_caches = []
+    for i, bp in enumerate(_blocks_list(params, cfg)):
+        kind = cfg.block_kind(i)
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        if kind in ("attn", "local"):
+            sub = dataclass_replace_attn(cfg, kind)
+            y, cache = attention_decode(bp["attn"], h, caches[i], sub,
+                                        positions=positions)
+        elif kind == "rglru":
+            y, cache = rglru_decode(bp["rglru"], h, caches[i], cfg)
+        else:
+            y, cache = ssd_decode(bp["ssd"], h, caches[i], cfg)
+        new_caches.append(cache)
+        x = x + y
+        if "ffn" in bp:
+            x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+        elif "moe" in bp:
+            y2, _ = moe(bp["moe"], apply_norm(bp["norm2"], x, cfg.norm),
+                        cfg.act, cfg.moe)
+            x = x + y2
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x, softcap=cfg.logit_softcap)
+    return logits, new_caches

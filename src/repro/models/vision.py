@@ -1,0 +1,99 @@
+"""The paper's hierarchical vision Flowformer (ImageNet §4.3, Tab. 8).
+
+Four stages — layers (3, 3, 10, 3), channels (96, 192, 384, 768), 16 heads,
+sequence lengths (3136, 784, 196, 49) for 224x224 inputs.  Patch embedding
+and between-stage downsampling are strided patch-merge linears (conv
+equivalents); global average pooling + linear classifier at the end.
+Attention is non-causal (kind "flow" reproduces the paper; "softmax"/"linear"
+give the baselines of Tab. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.attention import attention, attn_init
+from repro.layers.ffn import ffn, ffn_init
+from repro.layers.linear import dense, dense_init
+from repro.layers.norms import apply_norm, norm_init
+from repro.utils import KeySeq
+
+Array = jax.Array
+
+
+def _stage_cfg(cfg: ModelConfig, ch: int) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, d_model=ch, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+        head_dim=ch // cfg.n_heads, rope="none", mla=None, moe=None,
+    )
+
+
+def init(key, cfg: ModelConfig, *, patch: int = 4, in_ch: int = 3) -> dict:
+    ks = KeySeq(key)
+    chans = cfg.stage_channels
+    p: dict = {"patch_embed": dense_init(ks(), patch * patch * in_ch, chans[0])}
+    p["stages"] = []
+    for si, (n_layers, ch) in enumerate(zip(cfg.stage_layers, chans)):
+        scfg = _stage_cfg(cfg, ch)
+        blocks = []
+        for _ in range(n_layers):
+            ks2 = KeySeq(ks())
+            blocks.append({
+                "norm1": norm_init(ch, cfg.norm),
+                "attn": attn_init(ks2(), scfg),
+                "norm2": norm_init(ch, cfg.norm),
+                "ffn": ffn_init(ks2(), ch, 4 * ch, cfg.act),
+            })
+        stage = {"blocks": blocks}
+        if si + 1 < len(chans):
+            stage["merge"] = dense_init(ks(), 4 * ch, chans[si + 1])
+        p["stages"].append(stage)
+    p["final_norm"] = norm_init(chans[-1], cfg.norm)
+    p["classifier"] = dense_init(ks(), chans[-1], cfg.n_classes, bias=True)
+    return p
+
+
+def _patchify(images: Array, patch: int) -> Array:
+    b, h, w, c = images.shape
+    x = images.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * c)
+
+
+def _merge2x2(x: Array, hw: int) -> Array:
+    """(B, hw*hw, C) -> (B, (hw/2)^2, 4C) spatial 2x2 concat."""
+    b, n, c = x.shape
+    g = x.reshape(b, hw, hw, c)
+    g = g.reshape(b, hw // 2, 2, hw // 2, 2, c).transpose(0, 1, 3, 2, 4, 5)
+    return g.reshape(b, (hw // 2) ** 2, 4 * c)
+
+
+def forward(params, images: Array, cfg: ModelConfig, *, patch: int = 4,
+            dtype=jnp.bfloat16):
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    x = dense(params["patch_embed"], _patchify(images.astype(dtype), patch))
+    hw = images.shape[1] // patch
+    for si, stage in enumerate(params["stages"]):
+        scfg = _stage_cfg(cfg, cfg.stage_channels[si])
+        for bp in stage["blocks"]:
+            h = apply_norm(bp["norm1"], x, cfg.norm)
+            x = x + attention(bp["attn"], h, scfg, causal=False)
+            x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+        if "merge" in stage:
+            x = dense(stage["merge"], _merge2x2(x, hw))
+            hw //= 2
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    pooled = x.mean(axis=1)
+    return dense(params["classifier"], pooled).astype(jnp.float32)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    logits = forward(params, batch["images"], cfg, dtype=dtype)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return ce, {"loss": ce, "acc": acc}

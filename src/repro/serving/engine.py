@@ -1,0 +1,131 @@
+"""Serving engine: continuous batching over constant-size flow states.
+
+Flow-Attention's O(d^2) recurrent state (vs. an O(L) KV cache) changes the
+serving memory model completely: every slot of the decode batch costs the
+same bytes regardless of how long its context is, so
+
+  * slot admission never fragments (no paged allocator needed),
+  * context length never evicts anyone (a 500k-token conversation and an
+    8-token one occupy identical state),
+  * prefill can run chunked with bounded memory and its state hand-off to
+    the decode batch is a single tree-copy into the slot index.
+
+``Engine`` implements the standard continuous-batching loop: a FIFO of
+requests, a fixed-width slot array, per-step admit -> decode -> retire.
+Softmax-mode engines (KV caches) work through the same interface with
+``max_len``-bounded caches, for baseline comparisons (Tab. 3 at scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine:
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Single-host reference engine (the distributed serve_step shares the
+    same prefill/decode jit functions via launch/steps.py)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_len: int = 4096, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.caches = lm.init_caches(cfg, slots, max_len)
+        self.pos = np.zeros(slots, np.int64)
+        self._rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: lm.decode(p, tok, caches, cfg, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, toks: lm.prefill(p, toks, cfg, max_len)
+        )
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, caches = self._prefill(self.params, toks)
+            first = self._sample(logits[:, -1], req)
+            req.generated.append(int(first))
+            self._install(slot, caches)
+            self.pos[slot] = len(req.prompt)
+            self.active[slot] = req
+
+    def _install(self, slot: int, caches):
+        """Copy a batch-1 cache pytree into slot ``slot`` of the batch array."""
+        def put(dst, src):
+            if not hasattr(dst, "ndim") or dst.ndim == 0:
+                return dst  # scalar counters stay global (per-slot pos below)
+            if dst.shape and src.shape and dst.shape[0] == self.slots:
+                return dst.at[slot].set(src[0].astype(dst.dtype))
+            return dst
+
+        self.caches = jax.tree.map(put, self.caches, caches)
+
+    def _sample(self, logits, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits[-1] if logits.ndim > 1 else logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, logits / req.temperature))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One continuous-batching iteration; returns #active slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        tok = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            tok[i, 0] = self.active[i].generated[-1]
+        # flow/recurrent states are position-free; softmax caches use the
+        # max live position (paddings masked by per-cache pos counters)
+        pos = jnp.asarray(int(self.pos[live].max()))
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tok), self.caches, pos
+        )
+        for i in live:
+            req = self.active[i]
+            nxt = self._sample(np.asarray(logits)[i, 0], req)
+            req.generated.append(nxt)
+            self.pos[i] += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.active[i] = None
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return finished

@@ -1,0 +1,154 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+State layouts are plain pytrees mirroring the parameters so the ZeRO-1
+partition specs from distribution/sharding.py apply leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import global_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def adamw_init(master: PyTree) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return AdamWState(m=zeros(master), v=zeros(master),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(
+    grads: PyTree, opt: AdamWState, master: PyTree, lr: jax.Array,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> tuple[PyTree, AdamWState, dict]:
+    """One AdamW step on fp32 master params.  Returns (new_master, state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    step = opt.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # decay matrices, not norms/bias
+            update = update + cfg.weight_decay * p
+        return p - lr * update, m, v
+
+    flat_p, tdef = jax.tree.flatten(master)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        AdamWState(jax.tree.unflatten(tdef, new_m),
+                   jax.tree.unflatten(tdef, new_v), step),
+        {"grad_norm": gnorm},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — sublinear optimizer memory for the
+# 340B-class cells; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+class AdafactorState(NamedTuple):
+    vr: PyTree  # row second-moment (or full for <2D leaves)
+    vc: PyTree  # col second-moment (zeros for <2D leaves)
+    step: jax.Array
+
+
+def _factored(x) -> bool:
+    return x.ndim >= 2
+
+
+def adafactor_init(master: PyTree) -> AdafactorState:
+    vr = jax.tree.map(
+        lambda x: jnp.zeros(x.shape[:-1], jnp.float32) if _factored(x)
+        else jnp.zeros_like(x, jnp.float32),
+        master,
+    )
+    vc = jax.tree.map(
+        lambda x: jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+        if _factored(x) else jnp.zeros((), jnp.float32),
+        master,
+    )
+    return AdafactorState(vr=vr, vc=vc, step=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(
+    grads: PyTree, opt: AdafactorState, master: PyTree, lr: jax.Array,
+    cfg: AdafactorConfig = AdafactorConfig(),
+) -> tuple[PyTree, AdafactorState, dict]:
+    step = opt.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -cfg.decay
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), cfg.eps)
+            )
+            cfac = jax.lax.rsqrt(vc)
+            update = g * rfac[..., None] * cfac[..., None, :]
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            update = g * jax.lax.rsqrt(vr)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.weight_decay and p.ndim >= 2:
+            update = update + cfg.weight_decay * p
+        return p - lr * update, vr, vc
+
+    flat_p, tdef = jax.tree.flatten(master)
+    outs = [
+        upd(g, vr, vc, p)
+        for g, vr, vc, p in zip(
+            jax.tree.leaves(grads), jax.tree.leaves(opt.vr),
+            jax.tree.leaves(opt.vc), flat_p,
+        )
+    ]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_vr = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_vc = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_p, AdafactorState(new_vr, new_vc, step), {
+        "grad_norm": global_norm(grads)
+    }

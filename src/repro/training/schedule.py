@@ -1,0 +1,27 @@
+"""Learning-rate schedules (paper setups use warmup + inverse-sqrt/cosine)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def warmup_invsqrt(step, *, peak_lr: float, warmup: int):
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    warm = peak_lr * s / max(warmup, 1)
+    decay = peak_lr * jnp.sqrt(warmup / s)
+    return jnp.where(s < warmup, warm, decay)
+
+
+def constant(step, *, peak_lr: float, warmup: int = 0):
+    s = step.astype(jnp.float32)
+    if warmup:
+        return jnp.minimum(peak_lr, peak_lr * s / warmup)
+    return jnp.full_like(s, peak_lr)

@@ -1,0 +1,92 @@
+"""Checkpointing: roundtrip, atomicity, GC, async, crash-resume."""
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros((8,))},
+        "step_arr": jnp.asarray(3, jnp.int32),
+        "nested": [{"x": jnp.ones((2, 3), jnp.bfloat16)}],
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(10, tree)
+    restored, extra = mgr.restore(10, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]  # GC kept last 2
+
+
+def test_extra_state_rides_along(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _tree(), extra={"data_step": 123})
+    _, extra = mgr.restore(5, _tree())
+    assert extra == {"data_step": 123}
+
+
+def test_torn_write_is_invisible(tmp_path):
+    """A *_tmp directory (simulated crash mid-write) is never visible."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    # simulate a crash: a half-written tmp dir for step 2
+    tmp = pathlib.Path(tmp_path) / "step_000000000002_tmp"
+    tmp.mkdir()
+    (tmp / "shard_0.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 1
+    restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, _tree()))
+    assert restored is not None and restored[0] == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(7, tree, async_=True)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_restore_latest_none(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.restore_latest(_tree()) is None
+
+
+def test_crash_restart_resumes_training(tmp_path):
+    """End-to-end: train 6 steps with ckpt every 2; 'crash'; resume; the
+    resumed run replays the same data and reaches identical state."""
+    from repro.configs import get_smoke_config
+    from repro.launch.train import train
+
+    cfg = get_smoke_config("flowformer_lm")
+    full = train(cfg, steps=6, batch=2, seq=32, ckpt_dir=str(tmp_path / "a"),
+                 ckpt_every=2, log_every=100)
+
+    # crashy run: 4 steps only (ckpt at 2 and 4), same directory
+    partial = train(cfg, steps=4, batch=2, seq=32, ckpt_dir=str(tmp_path / "b"),
+                    ckpt_every=2, log_every=100)
+    resumed = train(cfg, steps=6, batch=2, seq=32, ckpt_dir=str(tmp_path / "b"),
+                    ckpt_every=2, log_every=100)
+    # the resumed run continues from step 4 and matches the uninterrupted run
+    np.testing.assert_allclose(resumed["history"][-2:], full["history"][-2:],
+                               rtol=1e-4)

@@ -1,0 +1,54 @@
+"""Elastic re-meshing, straggler detection, recovery-loop rebuilds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.elastic import ElasticTrainer, MeshPlan, StepMonitor, plan_mesh
+
+
+def test_plan_mesh_prefers_model_parallelism():
+    assert plan_mesh(256).shape == (16, 16)
+    assert plan_mesh(512).shape == (2, 16, 16)
+    assert plan_mesh(128).shape == (8, 16)
+    assert plan_mesh(17).shape == (1, 16)
+    assert plan_mesh(1).shape == (1, 1)
+    with pytest.raises(ValueError):
+        plan_mesh(0)
+
+
+def test_step_monitor_flags_stragglers():
+    flags = []
+    mon = StepMonitor(alpha=0.5, threshold=2.0,
+                      on_straggler=lambda s, dt, mu: flags.append(s))
+    for s in range(10):
+        mon.observe(s, 1.0)
+    mon.observe(10, 5.0)  # 5x the EWMA: straggler
+    assert flags == [10]
+    mon.observe(11, 1.0)
+    assert flags == [10]
+
+
+def test_elastic_trainer_recovers_from_checkpoint(tmp_path):
+    """Simulated failure: re-plan to fewer devices, restore state, continue."""
+    mgr = CheckpointManager(tmp_path)
+    state0 = {"w": jnp.arange(4.0)}
+    mgr.save(7, state0, extra={"data_step": 7})
+
+    built = []
+
+    def build(plan: MeshPlan):
+        built.append(plan)
+        def step_fn(state):
+            return {"w": state["w"] + 1}
+        return step_fn, {"w": jnp.zeros(4)}
+
+    trainer = ElasticTrainer(build, mgr, pod_size=4)
+    plan, step_fn, state, step = trainer.recover(n_healthy=8)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.arange(4.0))
+    # a second failure with fewer devices re-plans smaller
+    plan2, _, state2, step2 = trainer.recover(n_healthy=3)
+    assert plan2.n_devices <= 3 and step2 == 7
+    assert trainer.rebuilds == 2

@@ -1,0 +1,200 @@
+"""Core Flow-Attention: linear == quadratic oracle, conservation properties,
+ablations, GQA modes, phi choices — including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FlowConfig, flow_attention_causal, flow_attention_nc
+from repro.core.flow_attention import phi_map
+from repro.core.reference import (
+    flow_attention_causal_ref,
+    flow_attention_nc_ref,
+    softmax_attention_ref,
+)
+
+from conftest import assert_close
+
+
+def _qkv(key, b, hq, hkv, n, m, d, dv=None, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (b, hq, n, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, m, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, m, dv or d), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# linear == quadratic (associativity is the only difference)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gqa", ["shared", "expand"])
+@pytest.mark.parametrize("phi", ["sigmoid", "elu1", "relu"])
+def test_nc_matches_quadratic_ref(gqa, phi):
+    q, k, v = _qkv(0, 2, 8, 4, 33, 17, 16)
+    cfg = FlowConfig(gqa_mode=gqa, phi=phi)
+    assert_close(flow_attention_nc(q, k, v, cfg),
+                 flow_attention_nc_ref(q, k, v, cfg))
+
+
+@pytest.mark.parametrize("strict", [False, True])
+@pytest.mark.parametrize("chunk", [0, 16])
+def test_causal_matches_quadratic_ref(strict, chunk):
+    q, k, v = _qkv(1, 2, 4, 2, 64, 64, 16)
+    cfg = FlowConfig(causal=True, strict_causal=strict, chunk_size=chunk)
+    assert_close(flow_attention_causal(q, k, v, cfg),
+                 flow_attention_causal_ref(q, k, v, cfg), rtol=1e-3)
+
+
+def test_ablations_match_ref():
+    q, k, v = _qkv(2, 1, 2, 2, 24, 24, 8)
+    for comp, alloc in [(False, True), (True, False), (False, False)]:
+        cfg = FlowConfig(use_competition=comp, use_allocation=alloc)
+        assert_close(flow_attention_nc(q, k, v, cfg),
+                     flow_attention_nc_ref(q, k, v, cfg))
+        ccfg = FlowConfig(causal=True, use_competition=comp,
+                          use_allocation=alloc, chunk_size=0)
+        assert_close(flow_attention_causal(q, k, v, ccfg),
+                     flow_attention_causal_ref(q, k, v, ccfg), rtol=1e-3)
+
+
+def test_gqa_shared_equals_expand_when_mha():
+    q, k, v = _qkv(3, 2, 4, 4, 16, 16, 8)
+    a = flow_attention_nc(q, k, v, FlowConfig(gqa_mode="shared"))
+    b = flow_attention_nc(q, k, v, FlowConfig(gqa_mode="expand"))
+    assert_close(a, b)
+
+
+# ---------------------------------------------------------------------------
+# flow conservation (paper Eq. 6): after normalization, each source's
+# outgoing capacity and each sink's incoming capacity equal 1
+# ---------------------------------------------------------------------------
+def test_conservation_property():
+    eps = 1e-9
+    q, k, v = _qkv(4, 1, 1, 1, 40, 30, 16)
+    pq = phi_map(q.astype(jnp.float32), "sigmoid")[0, 0]
+    pk = phi_map(k.astype(jnp.float32), "sigmoid")[0, 0]
+    incoming = pq @ pk.sum(0)  # I_i (without eps)
+    outgoing = pk @ pq.sum(0)  # O_j
+    # source-j: (phi_k_j / O_j) . sum_i phi_q_i == 1   (Eq. 6 line 1)
+    src = (pk / outgoing[:, None]) @ pq.sum(0)
+    np.testing.assert_allclose(np.asarray(src), 1.0, rtol=1e-5)
+    # sink-i: (phi_q_i / I_i) . sum_j phi_k_j == 1     (Eq. 6 line 2)
+    snk = (pq / incoming[:, None]) @ pk.sum(0)
+    np.testing.assert_allclose(np.asarray(snk), 1.0, rtol=1e-5)
+
+
+def test_competition_weights_are_distribution():
+    """softmax(O_hat) sums to 1 over sources; x m it averages to 1."""
+    q, k, v = _qkv(5, 2, 2, 2, 32, 20, 8)
+    cfg = FlowConfig()
+    from repro.core.flow_attention import _group
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    qg = _group(phi_q, 2)
+    k_sum = phi_k.sum(axis=2)
+    q_sum = qg.sum(axis=(2, 3))
+    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + cfg.eps, k_sum + cfg.eps)
+    qi = (qg * sink_in[..., None]).sum(axis=(2, 3))
+    cons_src = jnp.clip(
+        jnp.einsum("bhmd,bhd->bhm", phi_k + cfg.eps, qi + cfg.eps), -1, 1
+    )
+    comp = jax.nn.softmax(cons_src, axis=-1)
+    np.testing.assert_allclose(np.asarray(comp.sum(-1)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the paper's degeneration claim: flow attention rows are non-uniform where
+# plain (competition-free) linear attention degenerates toward uniform
+# ---------------------------------------------------------------------------
+def test_competition_sharpens_attention():
+    q, k, v = _qkv(6, 1, 1, 1, 64, 64, 32)
+    cfg = FlowConfig()
+    from repro.core.flow_attention import _group
+
+    phi_q = phi_map(10 * q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(10 * k.astype(jnp.float32), cfg.phi)
+    # competition weights vary across sources (not near-constant)
+    qg = _group(phi_q, 1)
+    k_sum = phi_k.sum(axis=2)
+    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + cfg.eps, k_sum + cfg.eps)
+    qi = (qg * sink_in[..., None]).sum(axis=(2, 3))
+    cons_src = jnp.clip(
+        jnp.einsum("bhmd,bhd->bhm", phi_k + cfg.eps, qi + cfg.eps), -1, 1
+    )
+    comp = np.asarray(jax.nn.softmax(cons_src, axis=-1))[0, 0]
+    uniform = 1.0 / comp.size
+    assert comp.std() > 0.05 * uniform, "competition should differentiate sources"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2), hkv=st.integers(1, 3), g=st.integers(1, 3),
+    n=st.integers(1, 24), m=st.integers(1, 24), d=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_nc_linear_equals_quadratic_hypothesis(b, hkv, g, n, m, d, seed):
+    q, k, v = _qkv(seed, b, hkv * g, hkv, n, m, d)
+    cfg = FlowConfig()
+    assert_close(flow_attention_nc(q, k, v, cfg),
+                 flow_attention_nc_ref(q, k, v, cfg), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 32), d=st.integers(1, 12), seed=st.integers(0, 2**16),
+    strict=st.booleans(),
+)
+def test_causal_linear_equals_quadratic_hypothesis(n, d, seed, strict):
+    q, k, v = _qkv(seed, 1, 2, 1, n, n, d)
+    cfg = FlowConfig(causal=True, strict_causal=strict, chunk_size=8)
+    assert_close(flow_attention_causal(q, k, v, cfg),
+                 flow_attention_causal_ref(q, k, v, cfg), rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.1, 30.0))
+def test_outputs_finite_under_scale(seed, scale):
+    """No inf/nan for wide input ranges (the clamp + eps guarantees)."""
+    q, k, v = _qkv(seed, 1, 2, 2, 16, 16, 8)
+    q, k = q * scale, k * scale
+    out = flow_attention_nc(q, k, v, FlowConfig())
+    assert bool(jnp.isfinite(out).all())
+    outc = flow_attention_causal(q, k, v, FlowConfig(causal=True,
+                                                     strict_causal=True,
+                                                     chunk_size=0))
+    assert bool(jnp.isfinite(outc).all())
+
+
+def test_causal_prefix_property():
+    """Causal outputs for a prefix equal outputs on the truncated input."""
+    q, k, v = _qkv(7, 1, 2, 2, 32, 32, 8)
+    cfg = FlowConfig(causal=True, strict_causal=True, chunk_size=0)
+    full = flow_attention_causal(q, k, v, cfg)
+    half = flow_attention_causal(q[:, :, :16], k[:, :, :16], v[:, :, :16], cfg)
+    assert_close(full[:, :, :16], half, rtol=1e-4)
+
+
+def test_paper_faithful_causal_full_softmax_is_not_prefix_safe():
+    """Documents the official implementation's full-length competition
+    softmax: outputs at position i DO change with future tokens (which is
+    why serving uses strict_causal=True)."""
+    q, k, v = _qkv(8, 1, 1, 1, 32, 32, 8)
+    cfg = FlowConfig(causal=True, strict_causal=False, chunk_size=0)
+    full = flow_attention_causal(q, k, v, cfg)
+    half = flow_attention_causal(q[:, :, :16], k[:, :, :16], v[:, :, :16], cfg)
+    diff = np.abs(np.asarray(full[:, :, :16] - half)).max()
+    assert diff > 1e-6, "expected full-length softmax to couple to the future"
+
+
+def test_bf16_inputs_fp32_normalizers():
+    q, k, v = _qkv(9, 1, 2, 2, 32, 32, 16, dtype=jnp.bfloat16)
+    out = flow_attention_nc(q, k, v, FlowConfig())
+    assert out.dtype == jnp.bfloat16
+    ref = flow_attention_nc(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), FlowConfig())
+    assert_close(out, ref, rtol=2e-2, atol=2e-2)

@@ -1,0 +1,101 @@
+"""HLO parser units: shapes, trip counts, multipliers, collective bytes."""
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_analysis import Module, _shape_bytes
+
+SAMPLE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond.1 (arg.1: (s32[], f32[4])) -> pred[] {
+      %arg.1 = (s32[], f32[4]) parameter(0)
+      %gte = s32[] get-tuple-element(%arg.1), index=0
+      %constant.5 = s32[] constant(12)
+      ROOT %lt = pred[] compare(%gte, %constant.5), direction=LT
+    }
+
+    %body.1 (arg.2: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %arg.2 = (s32[], f32[4]) parameter(0)
+      %g0 = s32[] get-tuple-element(%arg.2), index=0
+      %g1 = f32[4]{0} get-tuple-element(%arg.2), index=1
+      %c1 = s32[] constant(1)
+      %add.1 = s32[] add(%g0, %c1)
+      %p = f32[4,8]{1,0} parameter(1)
+      %q = f32[8,4]{1,0} parameter(2)
+      %dot.1 = f32[4,4]{1,0} dot(%p, %q), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[4]{0} all-reduce(%g1), replica_groups={}, to_apply=%sum.1
+      ROOT %tup = (s32[], f32[4]) tuple(%add.1, %g1)
+    }
+
+    %sum.1 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main.1 (x: f32[4]) -> f32[4] {
+      %x = f32[4]{0} parameter(0)
+      %init = (s32[], f32[4]) tuple(%x)
+      %while.1 = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1
+      %ag = f32[16]{0} all-gather(%x), dimensions={0}
+      ROOT %out = f32[4]{0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]") == 128
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[2,2], s32[3])") == 28
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_trip_count_and_multipliers():
+    mod = Module(SAMPLE)
+    assert mod.mults["body.1"] == 12
+    assert mod.mults["main.1"] == 1
+    # reduction computation called from inside the body inherits x12
+    assert mod.mults["sum.1"] == 12
+
+
+def test_dot_flops_scaled_by_trips():
+    mod = Module(SAMPLE)
+    # dot: out 4x4, K=8 -> 2*16*8 = 256 flops, x12 trips
+    assert mod.dot_flops() == 256 * 12
+
+
+def test_collective_bytes():
+    mod = Module(SAMPLE)
+    c = mod.collective_bytes()
+    # all-reduce f32[4] in body x12 = 192; all-gather f32[16] in main = 64
+    assert c["by_op"]["all-reduce"] == 16 * 12
+    assert c["by_op"]["all-gather"] == 64
+    assert c["n_sites"] == 2
+
+
+def test_nested_whiles_multiply():
+    nested = SAMPLE.replace(
+        "ENTRY %main.1 (x: f32[4]) -> f32[4] {",
+        textwrap.dedent("""\
+        %cond.2 (arg.9: (s32[], f32[4])) -> pred[] {
+          %arg.9 = (s32[], f32[4]) parameter(0)
+          %g9 = s32[] get-tuple-element(%arg.9), index=0
+          %constant.9 = s32[] constant(3)
+          ROOT %lt9 = pred[] compare(%g9, %constant.9), direction=LT
+        }
+
+        %body.2 (arg.8: (s32[], f32[4])) -> (s32[], f32[4]) {
+          %arg.8 = (s32[], f32[4]) parameter(0)
+          %w2 = (s32[], f32[4]) while(%arg.8), condition=%cond.1, body=%body.1
+          ROOT %t2 = (s32[], f32[4]) tuple(%w2)
+        }
+
+        ENTRY %main.1 (x: f32[4]) -> f32[4] {"""),
+    ).replace(
+        "%while.1 = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1",
+        "%while.1 = (s32[], f32[4]) while(%init), condition=%cond.2, body=%body.2",
+    )
+    mod = Module(nested)
+    assert mod.mults["body.2"] == 3
+    assert mod.mults["body.1"] == 36  # 3 outer x 12 inner

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FlowConfig, flow_attention_nc
+from repro.kernels.flow_chunk import chunked_causal_dot_pallas, flow_chunk_ref
+from repro.kernels.flow_nc import flow_attention_nc_pallas
+from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
+from repro.kernels.flow_nc.ref import flow_nc_qside_ref
+from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_call
+
+from conftest import assert_close
+
+
+@pytest.mark.parametrize("b,h,g,n,d,dv,chunk", [
+    (1, 1, 1, 64, 16, 16, 16),
+    (2, 3, 2, 128, 32, 48, 32),
+    (1, 2, 4, 256, 64, 64, 128),
+    (2, 1, 1, 96, 24, 8, 32),
+])
+def test_flow_chunk_shapes(b, h, g, n, d, dv, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(n + d), 3)
+    qg = jax.random.normal(ks[0], (b, h, g, n, d))
+    k = jax.random.normal(ks[1], (b, h, n, d))
+    v = jax.random.normal(ks[2], (b, h, n, dv))
+    out = chunked_causal_dot_pallas(qg, k, v, chunk=chunk, interpret=True)
+    ref = flow_chunk_ref(qg.reshape(b * h, g, n, d), k.reshape(b * h, n, d),
+                         v.reshape(b * h, n, dv)).reshape(b, h, g, n, dv)
+    assert_close(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flow_chunk_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qg = jax.random.normal(ks[0], (2, 2, 2, 64, 16), dtype)
+    k = jax.random.normal(ks[1], (2, 2, 64, 16), dtype)
+    v = jax.random.normal(ks[2], (2, 2, 64, 16), dtype)
+    out = chunked_causal_dot_pallas(qg, k, v, chunk=16, interpret=True)
+    ref = flow_chunk_ref(
+        qg.astype(jnp.float32).reshape(4, 2, 64, 16),
+        k.astype(jnp.float32).reshape(4, 64, 16),
+        v.astype(jnp.float32).reshape(4, 64, 16),
+    ).reshape(2, 2, 2, 64, 16)
+    if dtype == jnp.float32:
+        assert_close(out, ref, rtol=1e-4, atol=1e-4)
+    else:
+        # bf16 storage: scale-aware bound (elementwise rtol is meaningless
+        # for near-zero entries of a +-30-magnitude output)
+        a = np.asarray(out, np.float32)
+        b = np.asarray(ref, np.float32)
+        scale = np.abs(b).max()
+        assert np.abs(a - b).max() <= 0.03 * scale, (
+            np.abs(a - b).max(), scale
+        )
+
+
+@pytest.mark.parametrize("n,d,dv,block", [(64, 16, 16, 16), (128, 32, 24, 64),
+                                          (256, 8, 8, 256)])
+def test_flow_nc_qside_shapes(n, d, dv, block):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    bh = 3
+    q = jax.random.normal(ks[0], (bh, n, d))
+    k_sum = jax.nn.sigmoid(jax.random.normal(ks[1], (bh, d))) * n
+    ko_sum = jax.nn.sigmoid(jax.random.normal(ks[2], (bh, d)))
+    kv = jax.random.normal(ks[3], (bh, d, dv))
+    out = flow_nc_qside_call(q, k_sum, ko_sum, kv, n_sinks=n, m_sources=n,
+                             block=block, interpret=True)
+    ref = flow_nc_qside_ref(q, k_sum, ko_sum, kv, n_sinks=n, m_sources=n)
+    assert_close(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_flow_nc_fused_matches_core():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 8, 64, 32))
+    k = jax.random.normal(ks[1], (2, 4, 48, 32))
+    v = jax.random.normal(ks[2], (2, 4, 48, 32))
+    cfg = FlowConfig()
+    out = flow_attention_nc_pallas(q, k, v, cfg, interpret=True)
+    ref = flow_attention_nc(q, k, v, cfg)
+    assert_close(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bh,n,p,s,chunk", [
+    (2, 64, 16, 8, 16), (4, 128, 32, 16, 32), (1, 96, 8, 4, 32),
+])
+def test_ssd_chunk_shapes(bh, n, p, s, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(p + s), 4)
+    x = jax.random.normal(ks[0], (bh, n, p)) * 0.5
+    dta = -jnp.abs(jax.random.normal(ks[1], (bh, n, 1))) * 0.1
+    b = jax.random.normal(ks[2], (bh, n, s)) * 0.5
+    c = jax.random.normal(ks[3], (bh, n, s)) * 0.5
+    out = ssd_chunk_call(x, dta, b, c, chunk=chunk, interpret=True)
+    ref = ssd_chunk_ref(x, dta, b, c)
+    assert_close(out, ref, rtol=2e-4, atol=1e-4)
+
+
+def test_ssd_chunk_strong_decay():
+    """Strong decay: output ~= diag-only (state forgets instantly)."""
+    bh, n, p, s = 1, 32, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(ks[0], (bh, n, p))
+    b = jax.random.normal(ks[1], (bh, n, s))
+    c = jax.random.normal(ks[2], (bh, n, s))
+    dta = jnp.full((bh, n, 1), -50.0)  # decay ~ e^-50
+    out = ssd_chunk_call(x, dta, b, c, chunk=8, interpret=True)
+    expect = jnp.einsum("bns,bns->bn", c, b)[..., None] * x
+    assert_close(out, expect, rtol=1e-4, atol=1e-4)

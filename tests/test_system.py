@@ -1,0 +1,58 @@
+"""End-to-end behaviour tests for the paper's system."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.train import train
+
+
+def test_flowformer_lm_learns_synthetic_text(tmp_path):
+    """Short LM training run: loss must drop substantially from init."""
+    cfg = get_smoke_config("flowformer_lm")
+    out = train(cfg, steps=30, batch=4, seq=64, log_every=100)
+    hist = out["history"]
+    assert hist[-1] < hist[0] - 0.5, hist[:3] + hist[-3:]
+
+
+def test_flow_vs_linear_attention_training():
+    """The paper's claim in miniature: flow >= plain linear attention on the
+    same budget (competition prevents degenerate attention)."""
+    results = {}
+    for kind in ("flow", "linear"):
+        cfg = get_smoke_config("flowformer_lm")
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention, kind=kind)
+        )
+        out = train(cfg, steps=40, batch=4, seq=64, log_every=100, seed=0)
+        results[kind] = np.mean(out["history"][-5:])
+    # allow slack: at this scale they should at least be comparable and
+    # flow must not be degenerate
+    assert results["flow"] <= results["linear"] + 0.1, results
+
+
+def test_long_context_decode_constant_memory():
+    """Flow decode state bytes are identical at pos 10 and pos 500_000."""
+    from repro.models import lm
+
+    cfg = get_smoke_config("granite_8b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    caches = lm.init_caches(cfg, batch=1, max_len=8)  # max_len irrelevant
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+    tok = jnp.zeros((1, 1), jnp.int32)
+    # jump the position counter to half a million: state shape unchanged
+    logits, caches2 = lm.decode(params, tok, caches, cfg,
+                                jnp.asarray(500_000))
+    nbytes2 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches2))
+    assert nbytes == nbytes2
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_train_step_deterministic():
+    cfg = get_smoke_config("flowformer_lm")
+    o1 = train(cfg, steps=3, batch=2, seq=32, log_every=100, seed=1)
+    o2 = train(cfg, steps=3, batch=2, seq=32, log_every=100, seed=1)
+    np.testing.assert_allclose(o1["history"], o2["history"], rtol=1e-6)
