@@ -2,7 +2,16 @@
 
 Flow/linear attention must stay ~flat in sequence length while softmax
 degrades quadratically — the paper's core scaling claim, measured here on
-CPU with a small model (relative scaling is hardware-independent)."""
+CPU with a small model (relative scaling is hardware-independent).
+
+Flow rows can sweep execution strategies by registry name:
+
+    python -m benchmarks.efficiency_table3 --backends auto,fused_causal,xla_cumsum
+    python -m benchmarks.efficiency_table3 --backends all
+
+Backends that reject a (shape, config) report ``n/a`` for that cell instead
+of aborting the sweep.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -26,15 +35,19 @@ def _bench(fn, *args, iters: int = 3) -> float:
     return iters / (time.time() - t0)
 
 
-def run(*, quick: bool = True) -> dict:
+def run(*, quick: bool = True, backends: tuple = ("auto",)) -> dict:
     lens = (256, 512, 1024) if quick else (1024, 2048, 3072, 4096)
     base = get_config("flowformer_lm")
     base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
                                n_kv_heads=4, d_ff=256, vocab_size=1024,
                                remat=False)
+    variants = [("flow", b) for b in backends]
+    variants += [("softmax", None), ("linear", None)]
     rows = {}
-    for kind in ("flow", "softmax", "linear"):
-        cfg = with_kind(base, kind)
+    for kind, backend in variants:
+        over = {"backend": backend} if backend else {}
+        cfg = with_kind(base, kind, **over)
+        name = kind if backend in (None, "auto") else f"flow[{backend}]"
         params = lm.init(jax.random.PRNGKey(0), cfg)
         row = {}
         for n in lens:
@@ -44,24 +57,51 @@ def run(*, quick: bool = True) -> dict:
 
             fwd = jax.jit(lambda p, b: lm.forward(p, b["inputs"], cfg)[0])
             step = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg)[0]))
-            row[f"infer_{n}"] = round(_bench(fwd, params, batch), 2)
-            row[f"train_{n}"] = round(_bench(step, params, batch), 2)
-        rows[kind] = row
+            # per-op try: a backend can support inference but not training
+            # (Pallas kernels have no AD rule), and a working infer number
+            # should survive a failing train bench
+            for col, fn in ((f"infer_{n}", fwd), (f"train_{n}", step)):
+                try:
+                    row[col] = round(_bench(fn, params, batch), 2)
+                except Exception as err:  # rejected shapes/config/AD — keep sweeping
+                    lines = str(err).strip().splitlines()
+                    why = lines[0] if lines else type(err).__name__
+                    print(f"  [{name} @ {col}] n/a: {why}")
+                    row[col] = "n/a"
+        rows[name] = row
     cols = [f"{m}_{n}" for m in ("infer", "train") for n in lens]
     print_table("Table 3 (efficiency): steps/s by sequence length", rows, cols)
     # scaling factor: throughput ratio first->last length (1.0 = perfectly linear)
-    for kind, row in rows.items():
+    for name, row in rows.items():
+        vals = [row[f"{m}_{n}"] for m in ("infer", "train") for n in lens]
+        if any(isinstance(x, str) for x in vals):
+            continue
         inf = row[f"infer_{lens[0]}"] / max(row[f"infer_{lens[-1]}"], 1e-9)
         trn = row[f"train_{lens[0]}"] / max(row[f"train_{lens[-1]}"], 1e-9)
         ideal = lens[-1] / lens[0]
-        rows[kind]["slowdown_vs_linear_ideal"] = round(
+        rows[name]["slowdown_vs_linear_ideal"] = round(
             max(inf, trn) / ideal, 2
         )
     save_table("efficiency_table3", rows)
     return rows
 
 
+def _parse_backends(arg: str) -> tuple:
+    if arg == "all":
+        from repro.attention import list_backends
+
+        return ("auto",) + list_backends()
+    return tuple(s for s in arg.split(",") if s)
+
+
 if __name__ == "__main__":
     import sys
 
-    run(quick="--full" not in sys.argv)
+    backends = ("auto",)
+    argv = sys.argv[1:]
+    if "--backends" in argv:
+        i = argv.index("--backends") + 1
+        if i >= len(argv) or argv[i].startswith("--"):
+            sys.exit("usage: --backends <name>[,<name>...] | all")
+        backends = _parse_backends(argv[i])
+    run(quick="--full" not in argv, backends=backends)

@@ -1,7 +1,8 @@
 """Quickstart: Flow-Attention as a drop-in linear attention.
 
 Shows (1) the core mechanism vs. a quadratic reference, (2) causal decoding
-from the O(d^2) recurrent state, (3) linear scaling in sequence length.
+from the O(d^2) recurrent state, (3) the backend registry, (4) linear
+scaling in sequence length.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,13 +11,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    FlowConfig,
-    decode_step,
-    flow_attention_causal,
-    flow_attention_nc,
-    prefill,
-)
+from repro import attention
+from repro.attention import FlowConfig, decode_step, prefill
+from repro.core import flow_attention_causal, flow_attention_nc
 from repro.core.reference import flow_attention_nc_ref
 
 
@@ -32,6 +29,14 @@ def main():
     ref = flow_attention_nc_ref(q, k, v, cfg)
     print(f"linear vs quadratic max|err| = "
           f"{float(jnp.abs(out - ref).max()):.2e}  (shape {out.shape})")
+
+    # 1b) execution is picked by the backend registry; sweep it by name
+    ccfg_probe = FlowConfig(causal=True, strict_causal=True)
+    shapes = attention.ShapeInfo.from_qkv(q, k, v)
+    picked = attention.resolve(ccfg_probe, shapes)
+    print(f"registry: auto -> {picked.name!r} for strict-causal {shapes}")
+    for name, ok, why in attention.explain(ccfg_probe, shapes):
+        print(f"  {name:>13}: {'ok ' if ok else 'no '} ({why})")
 
     # 2) causal prefill + recurrent decode: the whole "KV cache" is d x d
     ccfg = FlowConfig(causal=True, strict_causal=True)

@@ -1,0 +1,111 @@
+"""Pluggable Flow-Attention execution subsystem.
+
+This package is the ONLY place in the repo that selects how Flow-Attention
+(paper Eq. 4/7/8, Alg. 2) actually executes.  Call sites use the canonical
+three-op API and never name an execution path:
+
+    from repro import attention
+
+    out = attention.forward(q, k, v, cfg)          # cfg.causal picks variant
+    out, state = attention.prefill(q, k, v, cfg)   # strict-causal + FlowState
+    state, out = attention.decode_step(state, q, k, v, cfg)
+
+Strategy selection
+==================
+``FlowConfig.backend`` controls resolution:
+
+* ``"auto"`` (default) — first applicable backend in preference order::
+
+      pallas_nc > pallas_chunk > fused_causal > xla_chunked > xla_cumsum
+      > recurrent
+
+  Each backend *self-reports* applicability from (config, static shapes,
+  platform): Pallas kernels only volunteer on TPU; ``fused_causal`` needs
+  strict-causal competition and a power-of-two-chunkable length;
+  ``xla_chunked`` needs ``N % chunk_size == 0``; ``xla_cumsum`` always
+  applies.  Resolution is a pure function — same inputs, same backend.
+* ``"xla"`` / ``"pallas"`` — legacy families: auto restricted to non-Pallas /
+  Pallas backends (the latter allowed to interpret off-TPU).
+* any registered name (e.g. ``"fused_causal"``) — exactly that backend;
+  resolution raises with the backend's own reason string if it does not
+  apply.  Ops the named backend does not provide at all (``decode`` for the
+  forward-only strategies) fall back to auto order so pinning a forward
+  path never breaks serving.
+
+Registered strategies
+=====================
+* ``pallas_nc``     — non-causal sink side fused in a Pallas TPU kernel
+  (``kernels/flow_nc``); sigmoid phi + allocation, shared-GQA.
+* ``pallas_chunk``  — causal aggregation in a Pallas TPU kernel with the
+  (D, Dv) carry in VMEM scratch (``kernels/flow_chunk``).
+* ``fused_causal``  — strict-causal flows + cumulative softmax +
+  aggregation in ONE chunked ``lax.scan``; the carry is the decode
+  ``FlowState``, so prefill returns the serving hand-off for free and no
+  (B, H, N) intermediate round-trips HBM (see ``attention/fused.py``).
+* ``xla_chunked``   — unfused normalizers + chunked-scan aggregation
+  (absorbed from the former ``core/chunked.py``).
+* ``xla_cumsum``    — unfused normalizers + full-length cumsum aggregation;
+  the always-applicable correctness anchor.
+* ``recurrent``     — token-by-token O(d^2) recurrence (absorbed from
+  ``core/decode.py``); canonical ``decode_step`` provider and an
+  independent parity oracle for the others.
+
+Registering a new backend
+=========================
+Subclass ``Backend``, implement ``supports`` plus the ops you provide, and
+register it — no call site changes anywhere::
+
+    from repro.attention import Backend, register_backend
+
+    class MyKernel(Backend):
+        provides = frozenset({"forward"})
+
+        def supports(self, cfg, shapes, platform, *, op="forward",
+                     explicit=False):
+            if platform != "tpu":
+                return False, "my kernel is TPU-only"
+            return True, "ok"
+
+        def forward(self, q, k, v, cfg):
+            ...
+
+    register_backend("my_kernel", MyKernel(), before="fused_causal")
+
+``before=`` positions the backend in the auto order; benchmark sweeps pick
+it up by name immediately (``benchmarks/efficiency_table3.py --backends``).
+"""
+from repro.core.flow_attention import FlowConfig
+
+from repro.attention.registry import (
+    Backend,
+    ShapeInfo,
+    explain,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve,
+)
+from repro.attention.api import decode_step, forward, prefill
+from repro.attention.dots import causal_dot, causal_dot_grouped
+from repro.attention.recurrent import FlowState, init_state
+from repro.attention._pallas import chunked_causal_dot_pallas
+from repro.attention import backends as _backends  # registers the builtins
+
+__all__ = [
+    "FlowConfig",
+    "FlowState",
+    "Backend",
+    "ShapeInfo",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "resolve",
+    "explain",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_state",
+    "causal_dot",
+    "causal_dot_grouped",
+    "chunked_causal_dot_pallas",
+]

@@ -1,17 +1,16 @@
-"""Jit'd wrapper: shape policing + padding for the flow_chunk Pallas kernel.
+"""Jit'd wrappers around the raw Pallas kernels in ``repro/kernels``.
 
-``chunked_causal_dot_pallas`` is a drop-in for
-``repro.core.chunked.chunked_causal_dot_grouped`` (same contract, tested
-against the same oracle).  On CPU it runs in interpret mode; on TPU the
-compiled kernel keeps the carried state in VMEM.
+Shape policing + chunk adjustment live here so the kernels themselves stay
+pure grid/block code.  On CPU the kernels run in interpret mode; on TPU the
+compiled kernels keep the carried state in VMEM.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.attention.fused import effective_chunk
 from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -26,9 +25,7 @@ def chunked_causal_dot_pallas(
     interp = _INTERPRET if interpret is None else interpret
     b, h, g, n, d = qg.shape
     dv = v.shape[-1]
-    c = min(chunk, n)
-    while n % c:
-        c //= 2
+    c = effective_chunk(n, chunk)
     out = flow_chunk_call(
         qg.reshape(b * h, g, n, d),
         k.reshape(b * h, n, d),

@@ -1,0 +1,46 @@
+"""Canonical Flow-Attention entry points: forward / prefill / decode_step.
+
+Every call site in the repo (layers, models, serving, benchmarks) routes
+through these three functions; the registry picks the execution strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.flow_attention import FlowConfig
+from repro.attention.registry import ShapeInfo, resolve
+
+Array = jax.Array
+
+
+def forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+    """Full-sequence Flow-Attention; ``cfg.causal`` selects the variant.
+
+    q: (B, Hq, N, D); k: (B, Hkv, M, D); v: (B, Hkv, M, Dv) -> (B, Hq, N, Dv).
+    """
+    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="forward")
+    return be.forward(q, k, v, cfg)
+
+
+def prefill(q: Array, k: Array, v: Array, cfg: FlowConfig):
+    """Consume a prompt; return (per-position outputs, decode FlowState).
+
+    Forces the serving-grade strict-causal competition (the paper-faithful
+    full-length softmax has no autoregressive state).
+    """
+    cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
+    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="prefill")
+    return be.prefill(q, k, v, cfg)
+
+
+def decode_step(state, q: Array, k: Array, v: Array, cfg: FlowConfig):
+    """Advance one token on the O(d^2) recurrent state.
+
+    q: (B, Hq, 1, D); k: (B, Hkv, 1, D); v: (B, Hkv, 1, Dv).
+    Returns (new_state, out (B, Hq, 1, Dv)).
+    """
+    cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
+    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="decode")
+    return be.decode_step(state, q, k, v, cfg)

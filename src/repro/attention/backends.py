@@ -1,0 +1,235 @@
+"""The registered Flow-Attention backends.
+
+Registration order IS the ``backend="auto"`` preference order:
+
+    pallas_nc  > pallas_chunk  > fused_causal  > xla_chunked  > xla_cumsum
+    > recurrent
+
+Pallas backends only self-report applicable on TPU (interpret mode must be
+asked for explicitly); ``fused_causal`` carries the competition normalizer
+and the (D, Dv) aggregation state through one scan and is preferred over the
+multi-pass XLA paths wherever its contract (strict causal competition,
+chunkable length) holds; ``xla_cumsum`` accepts everything and is the
+correctness anchor; ``recurrent`` is the canonical decode provider and a
+token-by-token oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.flow_attention import FlowConfig
+from repro.attention import fused, pipeline, recurrent
+from repro.attention.chunked import chunked_causal_dot_grouped
+from repro.attention.dots import causal_dot_grouped
+from repro.attention.registry import Backend, ShapeInfo, register_backend
+
+Array = jax.Array
+
+
+def _cumsum_dot(qg, k, v):
+    return causal_dot_grouped(qg, k, v, chunk_size=0, use_pallas=False)
+
+
+def _check_causal_self(cfg: FlowConfig, shapes: ShapeInfo):
+    if not cfg.causal:
+        return "causal-only backend"
+    if shapes.n != shapes.m:
+        return f"causal requires N == M, got N={shapes.n} M={shapes.m}"
+    return None
+
+
+def _check_state_ops(cfg: FlowConfig, op: str):
+    if op in ("prefill", "decode") and not (
+        cfg.strict_causal and cfg.use_competition
+    ):
+        return "recurrent state requires strict_causal competition"
+    return None
+
+
+class XlaCumsum(Backend):
+    """Pure-XLA reference strategy: plain sums (non-causal) or full-length
+    cumsums (causal).  Always applicable — the resolution floor."""
+
+    provides = frozenset({"forward", "prefill"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        if cfg.causal:
+            why = _check_causal_self(cfg, shapes)
+            if why:
+                return False, why
+        why = _check_state_ops(cfg, op)
+        if why:
+            return False, why
+        return True, "universal fallback"
+
+    def forward(self, q, k, v, cfg):
+        if cfg.causal:
+            return pipeline.causal_forward(q, k, v, cfg, _cumsum_dot)
+        return pipeline.nc_forward(q, k, v, cfg)
+
+    def prefill(self, q, k, v, cfg):
+        return pipeline.causal_forward(q, k, v, cfg, _cumsum_dot,
+                                       return_state=True)
+
+
+class XlaChunked(Backend):
+    """Causal aggregation as a lax.scan over MXU-friendly chunks (absorbed
+    from the former ``core/chunked.py``)."""
+
+    provides = frozenset({"forward", "prefill"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_causal_self(cfg, shapes)
+        if why:
+            return False, why
+        why = _check_state_ops(cfg, op)
+        if why:
+            return False, why
+        c = cfg.chunk_size
+        if not c or c <= 0:
+            return False, "chunk_size <= 0"
+        if shapes.n % c or shapes.n <= c:
+            return False, f"N={shapes.n} not chunkable by chunk_size={c}"
+        return True, "chunked scan"
+
+    def _dot(self, cfg):
+        return functools.partial(chunked_causal_dot_grouped,
+                                 chunk_size=cfg.chunk_size)
+
+    def forward(self, q, k, v, cfg):
+        return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
+
+    def prefill(self, q, k, v, cfg):
+        return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg),
+                                       return_state=True)
+
+
+class PallasChunk(Backend):
+    """Causal aggregation via the ``kernels/flow_chunk`` Pallas TPU kernel
+    (carried (D,Dv) state in VMEM scratch)."""
+
+    provides = frozenset({"forward", "prefill"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_causal_self(cfg, shapes)
+        if why:
+            return False, why
+        why = _check_state_ops(cfg, op)
+        if why:
+            return False, why
+        if not cfg.chunk_size or cfg.chunk_size <= 0:
+            return False, "chunk_size <= 0"
+        if fused.effective_chunk(shapes.n, cfg.chunk_size) < 2:
+            return False, f"N={shapes.n} has no usable power-of-two chunk"
+        if platform != "tpu" and not explicit:
+            return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
+        return True, "pallas kernel"
+
+    def _dot(self, cfg):
+        # the jit'd wrapper shrinks the chunk to divide N, so any shape that
+        # passes supports() really runs the kernel (never a cumsum fallthrough)
+        from repro.attention._pallas import chunked_causal_dot_pallas
+
+        return functools.partial(chunked_causal_dot_pallas,
+                                 chunk=cfg.chunk_size)
+
+    def forward(self, q, k, v, cfg):
+        return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
+
+    def prefill(self, q, k, v, cfg):
+        return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg),
+                                       return_state=True)
+
+
+class PallasNC(Backend):
+    """Fused non-causal sink side via the ``kernels/flow_nc`` Pallas kernel.
+    The kernel hard-codes sigmoid phi and sigmoid allocation — applicability
+    reflects that."""
+
+    provides = frozenset({"forward"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        if cfg.causal:
+            return False, "non-causal-only backend"
+        if cfg.phi != "sigmoid":
+            return False, f"kernel hard-codes sigmoid phi, cfg has {cfg.phi!r}"
+        if not cfg.use_allocation:
+            return False, "kernel hard-codes the allocation sigmoid"
+        if cfg.gqa_mode != "shared" and shapes.hq != shapes.hkv:
+            return False, "kernel implements shared-GQA semantics only"
+        if platform != "tpu" and not explicit:
+            return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
+        return True, "fused nc kernel"
+
+    def forward(self, q, k, v, cfg):
+        from repro.kernels.flow_nc import flow_attention_nc_pallas
+
+        return flow_attention_nc_pallas(q, k, v, cfg)
+
+
+class FusedCausal(Backend):
+    """Strict-causal flows + cumulative softmax + aggregation in ONE scan —
+    the O(d^2) FlowState is the carry, so prefill hands decode its state for
+    free and no (B,H,N) intermediate ever round-trips HBM."""
+
+    provides = frozenset({"forward", "prefill"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_causal_self(cfg, shapes)
+        if why:
+            return False, why
+        if not cfg.strict_causal:
+            return False, "implements the strict-causal cumulative competition only"
+        if not cfg.use_competition:
+            return False, "fused carry includes the competition normalizer"
+        if not cfg.chunk_size or cfg.chunk_size <= 0:
+            return False, "chunk_size <= 0"
+        if fused.effective_chunk(shapes.n, cfg.chunk_size) < 2:
+            return False, f"N={shapes.n} has no usable power-of-two chunk"
+        return True, "fused strict-causal scan"
+
+    def forward(self, q, k, v, cfg):
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return fused.fused_causal_forward(q, k, v, cfg)
+
+    def prefill(self, q, k, v, cfg):
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return fused.fused_causal_forward(q, k, v, cfg, return_state=True)
+
+
+class Recurrent(Backend):
+    """Token-by-token O(d^2) recurrence (absorbed from ``core/decode.py``).
+    The canonical ``decode_step`` provider; forward/prefill run the same
+    update under lax.scan as an independent oracle."""
+
+    provides = frozenset({"forward", "prefill", "decode"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_causal_self(cfg, shapes)
+        if why:
+            return False, why
+        if not (cfg.strict_causal and cfg.use_competition):
+            return False, "recurrence exists only for strict_causal competition"
+        return True, "O(d^2) recurrence"
+
+    def forward(self, q, k, v, cfg):
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return recurrent.forward_by_scan(q, k, v, cfg)
+
+    def prefill(self, q, k, v, cfg):
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return recurrent.forward_by_scan(q, k, v, cfg, return_state=True)
+
+    def decode_step(self, state, q, k, v, cfg):
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return recurrent.decode_step(state, q, k, v, cfg)
+
+
+register_backend("pallas_nc", PallasNC())
+register_backend("pallas_chunk", PallasChunk())
+register_backend("fused_causal", FusedCausal())
+register_backend("xla_chunked", XlaChunked())
+register_backend("xla_cumsum", XlaCumsum())
+register_backend("recurrent", Recurrent())

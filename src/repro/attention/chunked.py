@@ -9,8 +9,9 @@ split the sequence into chunks of size C, then for chunk c
     S_{c+1} = S_c + K_c^T V_c              # carried (D,Dv) state
 
 All operations are 128-alignable matmuls; the carried state is O(D*Dv).
-This module is the pure-XLA (lax.scan) path; ``repro/kernels/flow_chunk``
-is the Pallas kernel with the same contract (same oracle in its ref.py).
+This module is the pure-XLA (lax.scan) primitive behind the ``xla_chunked``
+backend; ``repro/kernels/flow_chunk`` is the Pallas kernel with the same
+contract (same oracle in its ref.py), wrapped by ``attention/_pallas.py``.
 """
 from __future__ import annotations
 

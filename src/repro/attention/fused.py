@@ -1,0 +1,174 @@
+"""Fused strict-causal Flow-Attention: one scan, no (B,H,N) HBM rounds.
+
+The unfused strict-causal pipeline materializes the full-length flow
+normalizers (``sink_in``/``src_out``/``cons_*``), the competition weights
+``e = exp(cons_src)`` and the cumulative normalizer ``z`` as (B, H, N[, D])
+HBM tensors across several ``cumsum`` passes, and only then runs a separate
+chunked causal dot over the weighted values.  Each pass re-streams
+O(B*H*N*D) bytes through HBM.
+
+This module fuses the whole of paper Alg. 2 (strict-causal variant) into a
+single ``lax.scan`` over sequence chunks.  The carry is exactly the O(d^2)
+``FlowState`` — the same state recurrent decode consumes — and every
+intermediate inside a scan step is chunk-sized:
+
+    per chunk c (size C):
+      k/q running sums -> sink_in, src_out          (C-local cumsums + carry)
+      ko/qi running sums -> cons_sink, cons_src     (conservation, Eq. 7)
+      e = exp(clip(cons_src)); z += cumsum(e)       (cumulative competition)
+      v_w = V * e
+      out_c = [tril(Q'_c K_c^T) v_w + Q'_c S] * (pos/z) * alloc
+      S += K_c^T v_w                                (carried (D, Dv) state)
+
+All heavy ops are (C,C)x(C,Dv) and (C,D)x(D,Dv) matmuls (MXU-friendly,
+128-alignable); HBM traffic is one read of q/k/v and one write of out.
+Because the final carry IS the decode ``FlowState``, prefill gets the
+serving hand-off for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flow_attention import FlowConfig, _group, _ungroup, phi_map
+from repro.attention.recurrent import FlowState
+
+Array = jax.Array
+
+
+def effective_chunk(n: int, chunk_size: int) -> int:
+    """Largest power-of-two shrink of ``chunk_size`` that divides ``n``."""
+    c = max(1, min(chunk_size, n))
+    while n % c:
+        c //= 2
+    return c
+
+
+def fused_causal_forward(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: FlowConfig,
+    *,
+    return_state: bool = False,
+):
+    """Strict-causal Flow-Attention in one fused chunked scan.
+
+    q: (B, Hq, N, D); k: (B, Hkv, N, D); v: (B, Hkv, N, Dv); N == M.
+    Requires ``strict_causal`` and ``use_competition`` (the cumulative
+    softmax is what admits the O(d^2) carry).  GQA-expand must be applied by
+    the caller (see ``pipeline.expand_kv``); this function implements shared
+    semantics over whatever kv heads it is given.
+    """
+    assert cfg.strict_causal and cfg.use_competition, (
+        "fused path implements the strict-causal cumulative competition"
+    )
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    assert k.shape[2] == n, "causal flow attention requires N == M"
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    vf = v.astype(jnp.float32)
+
+    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
+    g = qg.shape[2]
+
+    c = effective_chunk(n, cfg.chunk_size)
+    nc = n // c
+
+    # chunk the sequence axis and lead with it for the scan
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, c, d), 3, 0)  # (nc,B,H,G,c,d)
+    ks = jnp.moveaxis(phi_k.reshape(b, hkv, nc, c, d), 2, 0)  # (nc,B,H,c,d)
+    vs = jnp.moveaxis(vf.reshape(b, hkv, nc, c, dv), 2, 0)  # (nc,B,H,c,dv)
+    # 1-based global positions per chunk: (nc, c)
+    pos = (jnp.arange(n, dtype=jnp.float32) + 1.0).reshape(nc, c)
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32))
+    f32 = jnp.float32
+    carry0 = FlowState(
+        t=jnp.full((b,), n, jnp.int32),  # static; only sums/z/s evolve
+        q_sum=jnp.zeros((b, hkv, d), f32),
+        k_sum=jnp.zeros((b, hkv, d), f32),
+        ko_sum=jnp.zeros((b, hkv, d), f32),
+        qi_sum=jnp.zeros((b, hkv, d), f32),
+        z=jnp.zeros((b, hkv), f32),
+        s=jnp.zeros((b, hkv, d, dv), f32),
+    )
+
+    def step(st: FlowState, xs):
+        qc, kc, vc, p = xs  # (B,H,G,c,d), (B,H,c,d), (B,H,c,dv), (c,)
+        normal_k = p  # sources seen up to position i
+        normal_q = p * g  # sinks seen (G per position)
+
+        # (1) flows from carried sums + chunk-local inclusive cumsums
+        k_csum = st.k_sum[:, :, None] + jnp.cumsum(kc, axis=2)  # (B,H,c,d)
+        q_csum = st.q_sum[:, :, None] + jnp.cumsum(qc.sum(axis=2), axis=2)
+        sink_in = normal_k / jnp.einsum(
+            "bhgnd,bhnd->bhgn", qc + eps, k_csum + eps
+        )
+        src_out = normal_q / jnp.einsum(
+            "bhnd,bhnd->bhn", kc + eps, q_csum + eps
+        )
+
+        # (2) conservation refinement
+        ko_csum = st.ko_sum[:, :, None] + jnp.cumsum(
+            kc * src_out[..., None], axis=2
+        )
+        cons_sink = jnp.einsum(
+            "bhgnd,bhnd->bhgn", qc + eps, ko_csum + eps
+        ) / normal_q
+        qi_csum = st.qi_sum[:, :, None] + jnp.cumsum(
+            (qc * sink_in[..., None]).sum(axis=2), axis=2
+        )
+        cons_src = jnp.clip(
+            jnp.einsum("bhnd,bhnd->bhn", kc + eps, qi_csum + eps) / normal_k,
+            -1.0,
+            1.0,
+        )
+
+        # (3) cumulative competition + allocation
+        if cfg.use_allocation:
+            alloc = jax.nn.sigmoid(cons_sink)
+        else:
+            alloc = jnp.ones_like(cons_sink)
+        e = jnp.exp(cons_src)  # in [1/e, e]: no running-max needed
+        z = st.z[:, :, None] + jnp.cumsum(e, axis=2)  # (B,H,c)
+        v_w = vc * e[..., None]
+
+        # (4) aggregation: intra-chunk tril matmul + carried (D,Dv) state
+        q_in = qc * sink_in[..., None]
+        scores = jnp.einsum(
+            "bhgid,bhjd->bhgij", q_in, kc, preferred_element_type=jnp.float32
+        )
+        intra = jnp.einsum(
+            "bhgij,bhje->bhgie", scores * mask, v_w,
+            preferred_element_type=jnp.float32,
+        )
+        inter = jnp.einsum(
+            "bhgid,bhde->bhgie", q_in, st.s, preferred_element_type=jnp.float32
+        )
+        out = (intra + inter) * (normal_k / z)[:, :, None, :, None]
+        out = out * alloc[..., None]
+
+        new = FlowState(
+            t=st.t,
+            q_sum=q_csum[:, :, -1],
+            k_sum=k_csum[:, :, -1],
+            ko_sum=ko_csum[:, :, -1],
+            qi_sum=qi_csum[:, :, -1],
+            z=z[:, :, -1],
+            s=st.s + jnp.einsum(
+                "bhjd,bhje->bhde", kc, v_w, preferred_element_type=jnp.float32
+            ),
+        )
+        return new, out.astype(out_dtype)
+
+    state, outs = jax.lax.scan(step, carry0, (qs, ks, vs, pos))
+    out = _ungroup(jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, n, dv))
+    if return_state:
+        return out, state
+    return out

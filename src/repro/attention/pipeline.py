@@ -1,0 +1,187 @@
+"""Unfused Flow-Attention math shared by the XLA / Pallas-dot backends.
+
+The normalizer algebra (paper Eq. 4/7/8, Alg. 2) is identical across
+execution strategies; what differs is how the causal aggregation
+``out_i = q'_i . sum_{j<=i} phiK_j^T V_hat_j`` is realized.  ``causal_forward``
+therefore takes the aggregation as a ``dot_fn`` argument — backends inject
+cumsum, chunked-scan or Pallas dots without duplicating the flow math.
+
+The fully fused strict-causal path (normalizers + competition + aggregation
+in one scan, no (B,H,N) HBM intermediates) lives in ``attention/fused.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flow_attention import FlowConfig, _group, _ungroup, phi_map
+
+Array = jax.Array
+DotFn = Callable[[Array, Array, Array], Array]
+
+
+def expand_kv(q: Array, k: Array, v: Array, cfg: FlowConfig):
+    """Apply ``gqa_mode="expand"`` by broadcasting kv heads to query heads."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if cfg.gqa_mode == "expand" and hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return k, v
+
+
+def nc_forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+    """Non-causal Flow-Attention (paper Eq. 4/7/8), pure XLA.
+
+    q: (B, Hq, N, D); k: (B, Hkv, M, D); v: (B, Hkv, M, Dv) with Hkv | Hq.
+    Returns (B, Hq, N, Dv).
+    """
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    k, v = expand_kv(q, k, v, cfg)
+    hkv, m = k.shape[1], k.shape[2]
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)  # (B,Hq,N,D)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)  # (B,Hkv,M,D)
+    vf = v.astype(jnp.float32)
+
+    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
+
+    # (1) incoming / outgoing flows (Eq. 4 + official eps placement)
+    k_sum = phi_k.sum(axis=2)  # (B,Hkv,D)
+    q_sum = qg.sum(axis=(2, 3))  # (B,Hkv,D) — sums over group+positions
+    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + eps, k_sum + eps)  # I^-1
+    src_out = 1.0 / jnp.einsum("bhmd,bhd->bhm", phi_k + eps, q_sum + eps)  # O^-1
+
+    # (2) conservation refinement (Eq. 7)
+    ko_sum = (phi_k * src_out[..., None]).sum(axis=2)  # (B,Hkv,D)
+    cons_sink = jnp.einsum("bhgnd,bhd->bhgn", qg + eps, ko_sum + eps)  # I_hat
+    qi_sum = (qg * sink_in[..., None]).sum(axis=(2, 3))  # (B,Hkv,D)
+    cons_src = jnp.einsum("bhmd,bhd->bhm", phi_k + eps, qi_sum + eps)  # O_hat
+    cons_src = jnp.clip(cons_src, -1.0, 1.0)  # official stability clamp
+
+    # (3) competition & allocation (Eq. 8, official n/m scalings)
+    n_sinks = qg.shape[2] * n  # G*N sinks per kv head (shared mode)
+    if cfg.use_competition:
+        comp = jax.nn.softmax(cons_src, axis=-1) * float(m)  # (B,Hkv,M)
+        v_hat = vf * comp[..., None]
+    else:
+        v_hat = vf
+    if cfg.use_allocation:
+        alloc = jax.nn.sigmoid(cons_sink * (float(n_sinks) / float(m)))
+    else:
+        alloc = jnp.ones_like(cons_sink)
+
+    # (4) linear aggregation: (phiQ * I^-1) @ (phiK^T @ V_hat)
+    kv = jnp.einsum("bhmd,bhme->bhde", phi_k, v_hat)  # (B,Hkv,D,Dv)
+    agg = jnp.einsum("bhgnd,bhde->bhgne", qg * sink_in[..., None], kv)
+    out = agg * alloc[..., None]
+    return _ungroup(out).astype(out_dtype)
+
+
+def causal_forward(
+    q: Array,
+    k: Array,
+    v: Array,
+    cfg: FlowConfig,
+    dot_fn: DotFn,
+    *,
+    return_state: bool = False,
+):
+    """Causal Flow-Attention (paper Alg. 2) with an injected aggregation.
+
+    q: (B, Hq, N, D); k: (B, Hkv, N, D); v: (B, Hkv, N, Dv); N == M.
+    ``dot_fn(qg, k, v)`` computes the grouped causal dot
+    (B,Hkv,G,N,D) x (B,Hkv,N,D) x (B,Hkv,N,Dv) -> (B,Hkv,G,N,Dv).
+    With ``return_state=True`` (requires ``strict_causal``) also returns the
+    O(d^2) recurrent ``FlowState`` that decode continues from.
+    """
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    assert k.shape[2] == n, "causal flow attention requires N == M"
+    if return_state:
+        assert cfg.strict_causal and cfg.use_competition, (
+            "recurrent decode state requires strict_causal competition"
+        )
+    k, v = expand_kv(q, k, v, cfg)
+    hkv = k.shape[1]
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    vf = v.astype(jnp.float32)
+
+    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
+    g = qg.shape[2]
+
+    # position count ("normal" in the official code).  With G grouped query
+    # heads each position contributes G sinks.
+    pos = jnp.arange(1, n + 1, dtype=jnp.float32)  # (N,)
+    normal_q = pos * g  # sinks seen up to i
+    normal_k = pos  # sources seen up to j
+
+    # (1) incoming / outgoing flows from inclusive cumsums
+    k_csum = jnp.cumsum(phi_k, axis=2)  # (B,Hkv,N,D)
+    q_csum = jnp.cumsum(qg.sum(axis=2), axis=2)  # (B,Hkv,N,D) summed over group
+    sink_in = 1.0 / jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, k_csum + eps)
+    sink_in = sink_in * normal_k  # official: rescale by count of sources
+    src_out = 1.0 / jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, q_csum + eps)
+    src_out = src_out * normal_q
+
+    # (2) conservation refinement
+    ko_csum = jnp.cumsum(phi_k * src_out[..., None], axis=2)
+    cons_sink = (
+        jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, ko_csum + eps) / normal_q
+    )
+    qi_csum = jnp.cumsum((qg * sink_in[..., None]).sum(axis=2), axis=2)
+    cons_src = (
+        jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, qi_csum + eps) / normal_k
+    )
+    cons_src = jnp.clip(cons_src, -1.0, 1.0)
+
+    # (3) competition & allocation
+    if cfg.use_allocation:
+        alloc = jax.nn.sigmoid(cons_sink)  # (B,Hkv,G,N)
+    else:
+        alloc = jnp.ones_like(cons_sink)
+
+    q_in = qg * sink_in[..., None]  # value-normalized queries
+    if not cfg.use_competition:
+        agg = dot_fn(q_in, phi_k, vf)
+        out = agg * alloc[..., None]
+        return _ungroup(out).astype(out_dtype)
+
+    if cfg.strict_causal:
+        # cumulative softmax: weight_{i,j} = exp(cs_j)/Z_i * normal_k_i
+        e = jnp.exp(cons_src)  # bounded in [1/e, e] by the clamp
+        z = jnp.cumsum(e, axis=-1)  # (B,Hkv,N)
+        v_w = vf * e[..., None]
+        agg = dot_fn(q_in, phi_k, v_w)
+        scale = (normal_k / z)[:, :, None, :, None]  # (B,Hkv,1,N,1)
+        out = agg * scale * alloc[..., None]
+        if return_state:
+            from repro.attention.recurrent import FlowState
+
+            state = FlowState(
+                t=jnp.full((b,), n, dtype=jnp.int32),
+                q_sum=q_csum[:, :, -1, :],
+                k_sum=k_csum[:, :, -1, :],
+                ko_sum=ko_csum[:, :, -1, :],
+                qi_sum=qi_csum[:, :, -1, :],
+                z=z[:, :, -1],
+                s=jnp.einsum(
+                    "bhnd,bhne->bhde", phi_k, v_w,
+                    preferred_element_type=jnp.float32,
+                ),
+            )
+            return _ungroup(out).astype(out_dtype), state
+    else:
+        # paper-faithful: softmax over the full length, scaled by N
+        comp = jax.nn.softmax(cons_src, axis=-1) * float(n)  # (B,Hkv,N)
+        v_hat = vf * comp[..., None]
+        agg = dot_fn(q_in, phi_k, v_hat)
+        out = agg * alloc[..., None]
+    return _ungroup(out).astype(out_dtype)

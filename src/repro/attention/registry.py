@@ -1,0 +1,175 @@
+"""Execution-strategy registry for Flow-Attention.
+
+One Flow-Attention, many ways to run it.  A ``Backend`` packages one
+execution strategy behind the canonical three-op API (``forward`` /
+``prefill`` / ``decode_step``) and *self-reports* its applicability —
+platform, causality, divisibility, GQA mode, competition flags — via
+``supports()``.  ``resolve()`` turns ``FlowConfig.backend`` into a concrete
+backend deterministically:
+
+* ``backend="auto"``   — first applicable backend in registration order.
+* ``backend="xla"``    — auto, restricted to non-Pallas backends (legacy).
+* ``backend="pallas"`` — auto, restricted to Pallas backends, allowed to run
+  in interpret mode off-TPU (legacy).
+* ``backend=<name>``   — that backend exactly; raises with the backend's own
+  reason string if it does not apply.
+
+Ops are resolved independently: if an explicitly named backend does not
+*provide* a requested op at all (e.g. ``xla_chunked`` never decodes), the op
+falls back to full auto order so serving keeps working when a forward
+strategy is pinned.  If the named backend provides the op but rejects the
+shapes/config, resolution raises — pinning is a contract, not a hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.flow_attention import FlowConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeInfo:
+    """Static call-site shapes a backend inspects in ``supports()``."""
+
+    b: int
+    hq: int
+    hkv: int
+    n: int  # query length
+    m: int  # key/value length
+    d: int
+    dv: int
+
+    @classmethod
+    def from_qkv(cls, q: Array, k: Array, v: Array) -> "ShapeInfo":
+        return cls(b=q.shape[0], hq=q.shape[1], n=q.shape[2], d=q.shape[3],
+                   hkv=k.shape[1], m=k.shape[2], dv=v.shape[3])
+
+
+class Backend:
+    """One Flow-Attention execution strategy.
+
+    Subclasses set ``name`` and ``provides`` and override ``supports`` plus
+    the ops they implement.  ``supports`` must be a *pure* function of
+    (cfg, shapes, platform, op, explicit) so resolution is deterministic.
+    """
+
+    name: str = "?"
+    #: subset of {"forward", "prefill", "decode"} this backend implements
+    provides: frozenset = frozenset({"forward"})
+
+    def supports(self, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
+                 *, op: str = "forward", explicit: bool = False):
+        """Return (applicable: bool, reason: str)."""
+        raise NotImplementedError
+
+    # canonical ops ---------------------------------------------------------
+    def forward(self, q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+        raise NotImplementedError(f"{self.name} does not provide forward")
+
+    def prefill(self, q: Array, k: Array, v: Array, cfg: FlowConfig):
+        raise NotImplementedError(f"{self.name} does not provide prefill")
+
+    def decode_step(self, state, q: Array, k: Array, v: Array, cfg: FlowConfig):
+        raise NotImplementedError(f"{self.name} does not provide decode_step")
+
+
+_REGISTRY: dict[str, Backend] = {}
+_ORDER: list[str] = []
+
+
+def register_backend(name: str, impl: Backend, *, before: str | None = None):
+    """Register ``impl`` under ``name``.
+
+    ``before`` inserts the backend ahead of an existing name in the auto
+    resolution order (new, more specialized backends outrank fallbacks).
+    """
+    if name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered")
+    impl.name = name
+    _REGISTRY[name] = impl
+    if before is not None and before in _ORDER:
+        _ORDER.insert(_ORDER.index(before), name)
+    else:
+        _ORDER.append(name)
+    return impl
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {tuple(_ORDER)}"
+        ) from None
+
+
+def list_backends() -> tuple:
+    """Registered backend names in auto-resolution order."""
+    return tuple(_ORDER)
+
+
+def _candidates(cfg: FlowConfig) -> tuple[list, bool]:
+    """(candidate names in order, explicit) for a FlowConfig.backend value."""
+    sel = cfg.backend
+    if sel == "auto":
+        return list(_ORDER), False
+    if sel == "xla":  # legacy: any non-Pallas strategy
+        return [n for n in _ORDER if not n.startswith("pallas")], False
+    if sel == "pallas":  # legacy: force a Pallas kernel (interpret off-TPU)
+        return [n for n in _ORDER if n.startswith("pallas")], True
+    if sel in _REGISTRY:
+        return [sel], True
+    raise ValueError(
+        f"unknown FlowConfig.backend {sel!r}; expected 'auto', 'xla', "
+        f"'pallas' or one of {tuple(_ORDER)}"
+    )
+
+
+def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
+            *, op: str = "forward") -> Backend:
+    """Deterministically pick the backend that will run ``op``.
+
+    Raises ``ValueError`` with every candidate's rejection reason when
+    nothing applies — the error is the documentation of why.
+    """
+    platform = platform or jax.default_backend()
+    names, explicit = _candidates(cfg)
+    if not any(op in _REGISTRY[n].provides for n in names):
+        # a pinned forward strategy never blocks prefill/decode: those ops
+        # fall back to full auto order (see module docstring)
+        names, explicit = list(_ORDER), False
+    rejections = []
+    for name in names:
+        be = _REGISTRY[name]
+        if op not in be.provides:
+            rejections.append(f"{name}: does not provide {op}")
+            continue
+        ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+        if ok:
+            return be
+        rejections.append(f"{name}: {why}")
+    raise ValueError(
+        f"no applicable Flow-Attention backend for op={op!r} on "
+        f"platform={platform!r} with {shapes}:\n  " + "\n  ".join(rejections)
+    )
+
+
+def explain(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
+            *, op: str = "forward") -> list:
+    """[(name, applicable, reason)] for every registered backend — debugging
+    aid and the data source for benchmark sweeps."""
+    platform = platform or jax.default_backend()
+    _, explicit = _candidates(cfg)
+    out = []
+    for name in _ORDER:
+        be = _REGISTRY[name]
+        if op not in be.provides:
+            out.append((name, False, f"does not provide {op}"))
+            continue
+        ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+        out.append((name, ok, why))
+    return out

@@ -23,6 +23,9 @@ class AttentionConfig:
     use_allocation: bool = True
     chunk_size: int = 128
     gqa_mode: str = "shared"
+    # flow execution strategy: "auto" | "xla" | "pallas" | a registered
+    # backend name (see repro/attention registry docs)
+    backend: str = "auto"
     # local / sliding-window attention (recurrentgemma)
     window: int = 2048
     # softmax

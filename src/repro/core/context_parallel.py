@@ -22,6 +22,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.flow_attention import FlowConfig, _group, _ungroup, phi_map
 
+# jax moved shard_map out of experimental in 0.5; support both
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 Array = jax.Array
 
 
@@ -149,10 +154,10 @@ def flow_attention_causal_cp(
 
     v_w = vf * e[..., None]
     # local causal dot + carried inter-device state
-    from repro.core.flow_attention import _grouped_causal_dot
+    from repro.attention import causal_dot_grouped
 
     q_in = qg * sink_in[..., None]
-    local = _grouped_causal_dot(q_in, phi_k, v_w, cfg.chunk_size)
+    local = causal_dot_grouped(q_in, phi_k, v_w, cfg.chunk_size)
     s_part = jax.lax.all_gather(
         jnp.einsum("bhnd,bhne->bhde", phi_k, v_w), axis_name
     )  # (P,B,Hkv,D,Dv)
@@ -177,7 +182,7 @@ def make_context_parallel(mesh, cfg: FlowConfig, *, seq_axis: str = "model"):
     spec = P(None, None, seq_axis, None)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(spec, spec, spec),
         out_specs=spec,

@@ -1,115 +1,17 @@
-"""O(d^2) recurrent decoding for strictly-causal Flow-Attention.
-
-The entire per-head "KV cache" of a Flowformer is:
-
-    q_sum, k_sum, ko_sum, qi_sum : (B, Hkv, D)   running flow sums
-    z                            : (B, Hkv)      competition normalizer
-    s                            : (B, Hkv, D, Dv) aggregation state
-    t                            : ()            position counter
-
-independent of context length — a 32k- or 500k-token context costs exactly
-the same per decode step.  ``decode_step`` reproduces position t+1 of
-``flow_attention_causal(strict_causal=True)`` bit-for-bit (up to fp32
-reassociation); tests/test_decode.py asserts the equivalence.
+"""Compatibility shim — the O(d^2) recurrent decode implementation moved to
+``repro/attention/recurrent.py`` (the ``recurrent`` backend of the execution
+registry).  Import from ``repro.attention`` in new code.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from repro.attention.recurrent import FlowState, decode_step, init_state
+from repro.core.flow_attention import FlowConfig
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.flow_attention import FlowConfig, _group, phi_map
-
-Array = jax.Array
+__all__ = ["FlowState", "decode_step", "init_state", "prefill"]
 
 
-class FlowState(NamedTuple):
-    t: Array  # (B,) int32 — positions consumed per batch row (continuous
-    # batching: slots decode at heterogeneous depths)
-    q_sum: Array  # (B, Hkv, D) fp32
-    k_sum: Array  # (B, Hkv, D) fp32
-    ko_sum: Array  # (B, Hkv, D) fp32
-    qi_sum: Array  # (B, Hkv, D) fp32
-    z: Array  # (B, Hkv) fp32
-    s: Array  # (B, Hkv, D, Dv) fp32
-
-
-def init_state(batch: int, n_kv: int, d: int, dv: int | None = None) -> FlowState:
-    dv = d if dv is None else dv
-    f32 = jnp.float32
-    return FlowState(
-        t=jnp.zeros((batch,), jnp.int32),
-        q_sum=jnp.zeros((batch, n_kv, d), f32),
-        k_sum=jnp.zeros((batch, n_kv, d), f32),
-        ko_sum=jnp.zeros((batch, n_kv, d), f32),
-        qi_sum=jnp.zeros((batch, n_kv, d), f32),
-        z=jnp.zeros((batch, n_kv), f32),
-        s=jnp.zeros((batch, n_kv, d, dv), f32),
-    )
-
-
-def prefill(
-    q: Array, k: Array, v: Array, cfg: FlowConfig
-) -> tuple[Array, FlowState]:
+def prefill(q, k, v, cfg: FlowConfig):
     """Consume a prompt; return per-position outputs and the decode state."""
-    from repro.core.flow_attention import flow_attention_causal
+    from repro import attention
 
-    cfg = FlowConfig(**{**cfg.__dict__, "causal": True, "strict_causal": True})
-    return flow_attention_causal(q, k, v, cfg, return_state=True)
-
-
-def decode_step(
-    state: FlowState, q: Array, k: Array, v: Array, cfg: FlowConfig
-) -> tuple[FlowState, Array]:
-    """Advance one token.
-
-    q: (B, Hq, 1, D); k: (B, Hkv, 1, D); v: (B, Hkv, 1, Dv).
-    Returns (new_state, out (B, Hq, 1, Dv)).
-    """
-    eps = cfg.eps
-    b, hq, one, d = q.shape
-    assert one == 1, "decode_step consumes exactly one position"
-    hkv = k.shape[1]
-    out_dtype = q.dtype
-
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)  # (B,Hq,1,D)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)[:, :, 0, :]  # (B,Hkv,D)
-    vf = v.astype(jnp.float32)[:, :, 0, :]  # (B,Hkv,Dv)
-
-    qg = _group(phi_q, hkv)[:, :, :, 0, :]  # (B,Hkv,G,D)
-    g = qg.shape[2]
-
-    t = state.t + 1  # (B,)
-    tf = t.astype(jnp.float32)[:, None, None]  # (B,1,1) per-slot counts
-    normal_k = tf  # sources seen so far
-    normal_q = tf * g  # sinks seen so far (G per position)
-
-    k_sum = state.k_sum + phi_k
-    q_sum = state.q_sum + qg.sum(axis=2)
-
-    sink_in = normal_k / jnp.einsum("bhgd,bhd->bhg", qg + eps, k_sum + eps)
-    src_out = normal_q[:, :, 0] / jnp.einsum("bhd,bhd->bh", phi_k + eps,
-                                             q_sum + eps)
-
-    ko_sum = state.ko_sum + phi_k * src_out[..., None]
-    cons_sink = jnp.einsum("bhgd,bhd->bhg", qg + eps, ko_sum + eps) / normal_q
-
-    qi_sum = state.qi_sum + (qg * sink_in[..., None]).sum(axis=2)
-    cons_src = jnp.einsum("bhd,bhd->bh", phi_k + eps, qi_sum + eps) / normal_k[:, :, 0]
-    cons_src = jnp.clip(cons_src, -1.0, 1.0)
-
-    alloc = jax.nn.sigmoid(cons_sink) if cfg.use_allocation else jnp.ones_like(cons_sink)
-
-    e = jnp.exp(cons_src)  # (B,Hkv)
-    z = state.z + e
-    s = state.s + jnp.einsum("bhd,bhe->bhde", phi_k, vf * e[..., None])
-
-    q_in = qg * sink_in[..., None]  # (B,Hkv,G,D)
-    agg = jnp.einsum("bhgd,bhde->bhge", q_in, s)
-    out = agg * (normal_k[:, :, 0] / z)[:, :, None, None] * alloc[..., None]
-    out = out.reshape(b, hq, 1, -1).astype(out_dtype)
-
-    new_state = FlowState(t=t, q_sum=q_sum, k_sum=k_sum, ko_sum=ko_sum,
-                          qi_sum=qi_sum, z=z, s=s)
-    return new_state, out
+    return attention.prefill(q, k, v, cfg)

@@ -28,9 +28,9 @@ Two causal competition modes:
   couples positions to the future, so it cannot be served autoregressively.
 * ``strict_causal=True`` (serving-grade): cumulative softmax — position i
   normalizes competition over sources j<=i only and rescales by i.  This
-  admits an O(d^2) recurrent state (see ``core/decode.py``) and identical
-  cost.  The official clamp of O_hat to [-1, 1] bounds exp(O_hat) to
-  [1/e, e], so the cumulative softmax needs no running-max renormalization.
+  admits an O(d^2) recurrent state (``repro/attention/recurrent.py``) and
+  identical cost.  The official clamp of O_hat to [-1, 1] bounds exp(O_hat)
+  to [1/e, e], so the cumulative softmax needs no running-max renorm.
 
 GQA: when the number of query heads is a multiple G of kv heads we support
 
@@ -41,11 +41,17 @@ GQA: when the number of query heads is a multiple G of kv heads we support
   flow attention (reference semantics; G=1 makes the two identical).
 
 All flow normalizers are computed in fp32 regardless of input dtype.
+
+Execution strategy is NOT chosen here: the implementations live behind the
+backend registry in ``repro/attention`` (see its module docstring for the
+selection rules), and ``FlowConfig.backend`` names a registered strategy or
+``"auto"``.  The ``flow_attention*`` functions below are thin wrappers kept
+for API stability; new code should call ``repro.attention.forward`` /
+``prefill`` / ``decode_step`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Literal
 
 import jax
@@ -66,11 +72,12 @@ class FlowConfig:
     # ablations (paper Tab. 2 rows / Tab. 11): disable either mechanism
     use_competition: bool = True
     use_allocation: bool = True
-    # chunk size for the chunked causal path (core/chunked.py); <=0 = jnp.cumsum
+    # chunk size for the chunked/fused causal strategies; <=0 = jnp.cumsum
     chunk_size: int = 128
-    # "auto": Pallas kernels on TPU, XLA path elsewhere (dry-run compiles on
-    # the CPU backend, where pallas_call cannot lower).
-    backend: Literal["auto", "xla", "pallas"] = "auto"
+    # execution strategy: "auto" resolves over the repro/attention registry
+    # (Pallas kernels on TPU, fused/chunked XLA elsewhere); "xla"/"pallas"
+    # restrict to those families; any registered backend name pins it.
+    backend: str = "auto"
 
 
 def phi_map(x: Array, kind: PhiKind) -> Array:
@@ -96,7 +103,7 @@ def _ungroup(x: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Non-causal Flow-Attention
+# Registry-routed entry points (API-stable wrappers)
 # ---------------------------------------------------------------------------
 def flow_attention_nc(
     q: Array, k: Array, v: Array, cfg: FlowConfig = FlowConfig()
@@ -106,72 +113,11 @@ def flow_attention_nc(
     q: (B, Hq, N, D); k: (B, Hkv, M, D); v: (B, Hkv, M, Dv) with Hkv | Hq.
     Returns (B, Hq, N, Dv).
     """
-    out_dtype = q.dtype
-    eps = cfg.eps
-    b, hq, n, d = q.shape
-    hkv, m = k.shape[1], k.shape[2]
+    from repro import attention
 
-    if cfg.gqa_mode == "expand" and hq != hkv:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-        hkv = hq
-
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)  # (B,Hq,N,D)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)  # (B,Hkv,M,D)
-    vf = v.astype(jnp.float32)
-
-    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
-
-    # (1) incoming / outgoing flows (Eq. 4 + official eps placement)
-    k_sum = phi_k.sum(axis=2)  # (B,Hkv,D)
-    q_sum = qg.sum(axis=(2, 3))  # (B,Hkv,D) — sums over group+positions
-    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + eps, k_sum + eps)  # I^-1
-    src_out = 1.0 / jnp.einsum("bhmd,bhd->bhm", phi_k + eps, q_sum + eps)  # O^-1
-
-    # (2) conservation refinement (Eq. 7)
-    ko_sum = (phi_k * src_out[..., None]).sum(axis=2)  # (B,Hkv,D)
-    cons_sink = jnp.einsum("bhgnd,bhd->bhgn", qg + eps, ko_sum + eps)  # I_hat
-    qi_sum = (qg * sink_in[..., None]).sum(axis=(2, 3))  # (B,Hkv,D)
-    cons_src = jnp.einsum("bhmd,bhd->bhm", phi_k + eps, qi_sum + eps)  # O_hat
-    cons_src = jnp.clip(cons_src, -1.0, 1.0)  # official stability clamp
-
-    # (3) competition & allocation (Eq. 8, official n/m scalings)
-    n_sinks = qg.shape[2] * n  # G*N sinks per kv head (shared mode)
-    if cfg.use_competition:
-        comp = jax.nn.softmax(cons_src, axis=-1) * float(m)  # (B,Hkv,M)
-        v_hat = vf * comp[..., None]
-    else:
-        v_hat = vf
-    if cfg.use_allocation:
-        alloc = jax.nn.sigmoid(cons_sink * (float(n_sinks) / float(m)))
-    else:
-        alloc = jnp.ones_like(cons_sink)
-
-    # (4) linear aggregation: (phiQ * I^-1) @ (phiK^T @ V_hat)
-    kv = jnp.einsum("bhmd,bhme->bhde", phi_k, v_hat)  # (B,Hkv,D,Dv)
-    agg = jnp.einsum("bhgnd,bhde->bhgne", qg * sink_in[..., None], kv)
-    out = agg * alloc[..., None]
-    return _ungroup(out).astype(out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# Causal Flow-Attention
-# ---------------------------------------------------------------------------
-def _causal_dot(q: Array, k: Array, v: Array, chunk_size: int) -> Array:
-    """out_i = q_i . sum_{j<=i} k_j^T v_j  over axis -2.  Linear complexity.
-
-    q,k: (..., N, D); v: (..., N, Dv).  Dispatches to the chunked MXU-friendly
-    path (core/chunked.py) when chunk_size > 0 and N is divisible; otherwise a
-    cumsum fallback (O(N * D * Dv) memory — test-scale only).
-    """
-    if chunk_size and q.shape[-2] % chunk_size == 0 and q.shape[-2] > chunk_size:
-        from repro.core.chunked import chunked_causal_dot
-
-        return chunked_causal_dot(q, k, v, chunk_size)
-    kv = jnp.einsum("...nd,...ne->...nde", k, v)
-    kv = jnp.cumsum(kv, axis=-3)
-    return jnp.einsum("...nd,...nde->...ne", q, kv)
+    if cfg.causal:
+        cfg = dataclasses.replace(cfg, causal=False)
+    return attention.forward(q, k, v, cfg)
 
 
 def flow_attention_causal(
@@ -187,145 +133,21 @@ def flow_attention_causal(
     q: (B, Hq, N, D); k: (B, Hkv, N, D); v: (B, Hkv, N, Dv).
     Returns (B, Hq, N, Dv); with ``return_state=True`` (requires
     ``strict_causal``) also returns the O(d^2) recurrent ``FlowState`` that
-    ``core/decode.py`` continues from.
+    decoding continues from.
     """
-    out_dtype = q.dtype
-    eps = cfg.eps
-    b, hq, n, d = q.shape
-    hkv = k.shape[1]
-    assert k.shape[2] == n, "causal flow attention requires N == M"
+    from repro import attention
+
+    if not cfg.causal:
+        cfg = dataclasses.replace(cfg, causal=True)
     if return_state:
         assert cfg.strict_causal and cfg.use_competition, (
             "recurrent decode state requires strict_causal competition"
         )
-
-    if cfg.gqa_mode == "expand" and hq != hkv:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-        hkv = hq
-
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
-    vf = v.astype(jnp.float32)
-
-    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
-    g = qg.shape[2]
-
-    # position count ("normal" in the official code).  With G grouped query
-    # heads each position contributes G sinks.
-    pos = jnp.arange(1, n + 1, dtype=jnp.float32)  # (N,)
-    normal_q = pos * g  # sinks seen up to i
-    normal_k = pos  # sources seen up to j
-
-    # (1) incoming / outgoing flows from inclusive cumsums
-    k_csum = jnp.cumsum(phi_k, axis=2)  # (B,Hkv,N,D)
-    q_csum = jnp.cumsum(qg.sum(axis=2), axis=2)  # (B,Hkv,N,D) summed over group
-    sink_in = 1.0 / jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, k_csum + eps)
-    sink_in = sink_in * normal_k  # official: rescale by count of sources
-    src_out = 1.0 / jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, q_csum + eps)
-    src_out = src_out * normal_q
-
-    # (2) conservation refinement
-    ko_csum = jnp.cumsum(phi_k * src_out[..., None], axis=2)
-    cons_sink = (
-        jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, ko_csum + eps) / normal_q
-    )
-    qi_csum = jnp.cumsum((qg * sink_in[..., None]).sum(axis=2), axis=2)
-    cons_src = (
-        jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, qi_csum + eps) / normal_k
-    )
-    cons_src = jnp.clip(cons_src, -1.0, 1.0)
-
-    # (3) competition & allocation
-    if cfg.use_allocation:
-        alloc = jax.nn.sigmoid(cons_sink)  # (B,Hkv,G,N)
-    else:
-        alloc = jnp.ones_like(cons_sink)
-
-    q_in = qg * sink_in[..., None]  # value-normalized queries
-    if not cfg.use_competition:
-        v_hat = vf
-        agg = _causal_dot(
-            q_in.reshape(b, hkv * g, n, d).reshape(b * hkv * g, n, d),
-            jnp.broadcast_to(phi_k[:, :, None], (b, hkv, g, n, d)).reshape(-1, n, d),
-            jnp.broadcast_to(vf[:, :, None], (b, hkv, g, n, vf.shape[-1])).reshape(
-                -1, n, vf.shape[-1]
-            ),
-            cfg.chunk_size,
-        ).reshape(b, hkv, g, n, -1)
-        out = agg * alloc[..., None]
-        return _ungroup(out).astype(out_dtype)
-
-    if cfg.strict_causal:
-        # cumulative softmax: weight_{i,j} = exp(cs_j)/Z_i * normal_k_i
-        e = jnp.exp(cons_src)  # bounded in [1/e, e] by the clamp
-        z = jnp.cumsum(e, axis=-1)  # (B,Hkv,N)
-        v_w = vf * e[..., None]
-        agg = _grouped_causal_dot(q_in, phi_k, v_w, cfg.chunk_size, cfg.backend)
-        scale = (normal_k / z)[:, :, None, :, None]  # (B,Hkv,1,N,1)
-        out = agg * scale * alloc[..., None]
-        if return_state:
-            from repro.core.decode import FlowState
-
-            state = FlowState(
-                t=jnp.full((b,), n, dtype=jnp.int32),
-                q_sum=q_csum[:, :, -1, :],
-                k_sum=k_csum[:, :, -1, :],
-                ko_sum=ko_csum[:, :, -1, :],
-                qi_sum=qi_csum[:, :, -1, :],
-                z=z[:, :, -1],
-                s=jnp.einsum(
-                    "bhnd,bhne->bhde", phi_k, v_w,
-                    preferred_element_type=jnp.float32,
-                ),
-            )
-            return _ungroup(out).astype(out_dtype), state
-    else:
-        # paper-faithful: softmax over the full length, scaled by N
-        comp = jax.nn.softmax(cons_src, axis=-1) * float(n)  # (B,Hkv,N)
-        v_hat = vf * comp[..., None]
-        agg = _grouped_causal_dot(q_in, phi_k, v_hat, cfg.chunk_size, cfg.backend)
-        out = agg * alloc[..., None]
-    return _ungroup(out).astype(out_dtype)
+        return attention.prefill(q, k, v, cfg)
+    return attention.forward(q, k, v, cfg)
 
 
-def _use_pallas(backend: str) -> bool:
-    if backend == "pallas":
-        return True
-    return backend == "auto" and jax.default_backend() == "tpu"
-
-
-def _grouped_causal_dot(
-    qg: Array, k: Array, v: Array, chunk_size: int, backend: str = "auto"
-) -> Array:
-    """Causal dot with grouped queries.
-
-    qg: (B,Hkv,G,N,D); k: (B,Hkv,N,D); v: (B,Hkv,N,Dv) -> (B,Hkv,G,N,Dv).
-    The carried state S = cumsum(k^T v) is shared across the group, so we
-    compute it once per kv head.
-    """
-    if (
-        _use_pallas(backend)
-        and chunk_size
-        and qg.shape[-2] % chunk_size == 0
-    ):
-        from repro.kernels.flow_chunk import chunked_causal_dot_pallas
-
-        return chunked_causal_dot_pallas(qg, k, v, chunk=chunk_size)
-    if chunk_size and qg.shape[-2] % chunk_size == 0 and qg.shape[-2] > chunk_size:
-        from repro.core.chunked import chunked_causal_dot_grouped
-
-        return chunked_causal_dot_grouped(qg, k, v, chunk_size)
-    kv = jnp.einsum("bhnd,bhne->bhnde", k, v)
-    kv = jnp.cumsum(kv, axis=2)
-    return jnp.einsum("bhgnd,bhnde->bhgne", qg, kv)
-
-
-# ---------------------------------------------------------------------------
-# Dispatch
-# ---------------------------------------------------------------------------
 def flow_attention(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
-    if cfg.causal:
-        return flow_attention_causal(q, k, v, cfg)
-    return flow_attention_nc(q, k, v, cfg)
+    from repro import attention
+
+    return attention.forward(q, k, v, cfg)

@@ -1,4 +1,7 @@
-from repro.kernels.flow_chunk.ops import chunked_causal_dot_pallas
+"""Raw Pallas kernel for the chunked causal aggregation.  The jit'd
+shape-policing wrapper lives in ``repro/attention/_pallas.py`` (the
+execution subsystem owns path selection)."""
+from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
 from repro.kernels.flow_chunk.ref import flow_chunk_ref
 
-__all__ = ["chunked_causal_dot_pallas", "flow_chunk_ref"]
+__all__ = ["flow_chunk_call", "flow_chunk_ref"]

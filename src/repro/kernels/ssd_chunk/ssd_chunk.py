@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 Array = jax.Array
 
 
@@ -87,7 +90,7 @@ def ssd_chunk_call(
         out_shape=jax.ShapeDtypeStruct((bh, n, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(x, dta, b, c)

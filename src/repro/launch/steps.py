@@ -1,7 +1,11 @@
 """Step builders: distributed train_step / serve_step per architecture.
 
 These produce the exact jitted computations that the dry-run lowers and
-the real launchers (train.py / serve.py) execute.
+the real launchers (train.py / serve.py) execute.  Flow-Attention execution
+inside every step is resolved by the ``repro/attention`` backend registry
+(from ``cfg.attention.backend``) at trace time — step builders only decide
+distribution (sharding, microbatching, sequence parallelism), never which
+kernel runs the attention math.
 """
 from __future__ import annotations
 

@@ -9,8 +9,12 @@ Modes:
   * ``decode``   — one token + cache.
 
 Caches:
-  * flow/linear  — O(d^2) recurrent state (``core/decode.py``), constant in
-                   context length: this is why `long_500k` decode is cheap.
+  * flow/linear  — O(d^2) recurrent state (``repro/attention/recurrent.py``),
+                   constant in context length: why `long_500k` decode is cheap.
+
+Flow execution (which kernel/scan realizes the math) is resolved by the
+``repro/attention`` backend registry from ``cfg.attention.backend``; this
+layer never names an execution path.
   * softmax      — dense KV cache (B, Hkv, L, D) written at position t.
   * local        — ring-buffer KV cache of window size W.
   * MLA+softmax  — compressed latent cache (B, L, kv_lora+rope) with the
@@ -23,9 +27,10 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import attention as flow_backend
+from repro.attention import FlowState, init_state
 from repro.config import ModelConfig
-from repro.core.decode import FlowState, decode_step, init_state
-from repro.core.flow_attention import FlowConfig, flow_attention_causal, flow_attention_nc, phi_map
+from repro.core.flow_attention import FlowConfig, phi_map
 from repro.layers.linear import dense, dense_init
 from repro.layers.rope import apply_mrope, apply_rope
 from repro.utils import KeySeq
@@ -61,6 +66,7 @@ def flow_cfg_of(cfg: ModelConfig, causal: bool) -> FlowConfig:
         use_allocation=a.use_allocation,
         chunk_size=a.chunk_size,
         gqa_mode=a.gqa_mode,
+        backend=a.backend,
     )
 
 
@@ -241,9 +247,7 @@ def _linear_attn(q, k, v, *, causal: bool, phi: str = "elu1",
     pk = phi_map(k.astype(jnp.float32), phi)
     vf = v.astype(jnp.float32)
     if causal:
-        from repro.core.flow_attention import _causal_dot
-
-        num = _causal_dot(pq, pk, vf, chunk_size)
+        num = flow_backend.causal_dot(pq, pk, vf, chunk_size)
         den = jnp.einsum("bhnd,bhnd->bhn", pq, jnp.cumsum(pk, axis=2))
     else:
         kv = jnp.einsum("bhmd,bhme->bhde", pk, vf)
@@ -280,12 +284,7 @@ def attention(
         q, k, v = _project_qkv_mla(params, x, cfg, positions)
 
     if kind == "flow":
-        fc = flow_cfg_of(cfg, causal)
-        out = (
-            flow_attention_causal(q, k, v, fc)
-            if causal
-            else flow_attention_nc(q, k, v, fc)
-        )
+        out = flow_backend.forward(q, k, v, flow_cfg_of(cfg, causal))
     elif kind == "softmax":
         out = _softmax_attn(q, k, v, causal=causal, softcap=cfg.attention.softcap)
     elif kind == "local":
@@ -347,7 +346,7 @@ def attention_decode(
 
     if kind == "flow":
         fc = flow_cfg_of(cfg, causal=True)
-        new_state, out = decode_step(cache, q, k, v, fc)
+        new_state, out = flow_backend.decode_step(cache, q, k, v, fc)
         return dense(params["wo"], _merge_heads(out)), new_state
     if kind == "linear":
         pq = phi_map(q.astype(jnp.float32), "elu1")[:, :, 0]
@@ -440,8 +439,7 @@ def attention_prefill(
     q, k, v = _project_qkv(params, x, cfg, positions)
     if kind == "flow":
         fc = flow_cfg_of(cfg, causal=True)
-        fc = FlowConfig(**{**fc.__dict__, "strict_causal": True})
-        out, state = flow_attention_causal(q, k, v, fc, return_state=True)
+        out, state = flow_backend.prefill(q, k, v, fc)
         return dense(params["wo"], _merge_heads(out)), state
     if kind == "linear":
         out = _linear_attn(q, k, v, causal=True, chunk_size=cfg.attention.chunk_size)
@@ -482,13 +480,15 @@ def attention_prefill(
         pad = max_len - n
         c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
         k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        # cache precision follows the activations: bf16 serving keeps bf16
+        # caches, fp32 parity tests get exact hand-off
         return dense(params["wo"], _merge_heads(out)), MLACache(
-            c_kv.astype(jnp.bfloat16), k_rope.astype(jnp.bfloat16),
+            c_kv.astype(x.dtype), k_rope.astype(x.dtype),
             jnp.full((b,), n, jnp.int32),
         )
     pad = max_len - n
-    kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
-    vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16)
+    kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
+    vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
     return dense(params["wo"], _merge_heads(out)), KVCache(
         kc, vc, jnp.full((b,), n, jnp.int32)
     )

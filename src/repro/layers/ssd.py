@@ -11,7 +11,7 @@ is computed with the chunked dual form (all matmuls, MXU-friendly):
     across chunks: y_inter = exp(cum_i) * (C_i @ h_prev)
     state update:  h_new   = exp(cum_total) * h_prev + sum_j exp(cum_total - cum_j) (dt_j x_j) outer B_j
 
-Structure intentionally mirrors core/chunked.py — SSD *is* decay-gated
+Structure intentionally mirrors repro/attention/chunked.py — SSD *is* decay-gated
 chunked linear attention (the duality), which is why our Pallas chunk kernel
 family covers both (kernels/ssd_chunk).
 """

@@ -52,6 +52,7 @@ class Engine:
         self.max_len = max_len
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
+        self.finished: list[Request] = []
         self.caches = lm.init_caches(cfg, slots, max_len)
         self.pos = np.zeros(slots, np.int64)
         self._rng = jax.random.PRNGKey(seed)
@@ -75,6 +76,12 @@ class Engine:
             logits, caches = self._prefill(self.params, toks)
             first = self._sample(logits[:, -1], req)
             req.generated.append(int(first))
+            if len(req.generated) >= req.max_new_tokens:
+                # budget met by the prefill-sampled token: retire without
+                # ever occupying a slot
+                req.done = True
+                self.finished.append(req)
+                continue
             self._install(slot, caches)
             self.pos[slot] = len(req.prompt)
             self.active[slot] = req
@@ -120,12 +127,20 @@ class Engine:
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.active[i] = None
+                self.finished.append(req)
         return len(live)
 
+    def take_finished(self) -> list[Request]:
+        """Drain retired requests (keeps engine memory bounded over a long
+        serving lifetime — retirees are held only until collected)."""
+        out, self.finished = self.finished, []
+        return out
+
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
+        """Drive the loop until every queued request retires (or max_steps);
+        drains and returns the retired requests, in retirement order."""
         for _ in range(max_steps):
             n = self.step()
             if n == 0 and not self.queue:
                 break
-        return finished
+        return self.take_finished()

@@ -1,10 +1,15 @@
 """Core Flow-Attention: linear == quadratic oracle, conservation properties,
-ablations, GQA modes, phi choices — including hypothesis property tests."""
+ablations, GQA modes, phi choices — including hypothesis property tests.
+
+Property tests use the real ``hypothesis`` when installed and fall back to
+deterministic seeded draws otherwise (see tests/_hypothesis_shim.py), so the
+suite always collects."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core import FlowConfig, flow_attention_causal, flow_attention_nc
 from repro.core.flow_attention import phi_map

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.attention import chunked_causal_dot_pallas
 from repro.core import FlowConfig, flow_attention_nc
-from repro.kernels.flow_chunk import chunked_causal_dot_pallas, flow_chunk_ref
+from repro.kernels.flow_chunk import flow_chunk_ref
 from repro.kernels.flow_nc import flow_attention_nc_pallas
 from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
 from repro.kernels.flow_nc.ref import flow_nc_qside_ref

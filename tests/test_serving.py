@@ -67,6 +67,34 @@ def test_engine_continuous_batching():
     assert reqs[0].generated is not None
 
 
+def test_engine_run_returns_finished_requests():
+    """Regression: Engine.run() used to return [] — finished requests were
+    never retired into the result list."""
+    cfg = get_smoke_config("flowformer_lm")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = Engine(params, cfg, slots=2, max_len=64)
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=4)
+        for i in range(5)
+    ]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert {r.uid for r in done} == {r.uid for r in reqs}
+    assert all(r.done and len(r.generated) == 4 for r in done)
+    # a second run with nothing queued completes no further requests
+    assert engine.run() == []
+    # max_new_tokens=1 is satisfied by the prefill-sampled token alone —
+    # it must not overshoot to 2 via a decode step
+    one = Request(uid=100, prompt=rng.integers(0, cfg.vocab_size, 8)
+                  .astype(np.int32), max_new_tokens=1)
+    engine.submit(one)
+    (done_one,) = engine.run()
+    assert done_one.uid == 100 and len(done_one.generated) == 1
+
+
 def test_engine_matches_unbatched_greedy():
     """Continuous-batched greedy == one-at-a-time greedy decode."""
     cfg = get_smoke_config("flowformer_lm")

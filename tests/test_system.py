@@ -27,7 +27,9 @@ def test_flow_vs_linear_attention_training():
         cfg = dataclasses.replace(
             cfg, attention=dataclasses.replace(cfg.attention, kind=kind)
         )
-        out = train(cfg, steps=40, batch=4, seq=64, log_every=100, seed=0)
+        # 80 steps: at 40 flow is still warming up (competition adds a few
+        # steps of lag at this scale) and the comparison is pure noise
+        out = train(cfg, steps=80, batch=4, seq=64, log_every=100, seed=0)
         results[kind] = np.mean(out["history"][-5:])
     # allow slack: at this scale they should at least be comparable and
     # flow must not be degenerate
