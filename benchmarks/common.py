@@ -10,13 +10,12 @@ import dataclasses
 import json
 import pathlib
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AttentionConfig, ModelConfig
+from repro.config import ModelConfig
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 from repro.training.schedule import warmup_cosine
 

@@ -18,8 +18,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import print_table, save_table, with_kind
 from repro.configs import get_config
@@ -35,8 +33,9 @@ def _bench(fn, *args, iters: int = 3) -> float:
     return iters / (time.time() - t0)
 
 
-def run(*, quick: bool = True, backends: tuple = ("auto",)) -> dict:
-    lens = (256, 512, 1024) if quick else (1024, 2048, 3072, 4096)
+def run(*, quick: bool = True, backends: tuple = ("auto",),
+        lens: tuple | None = None) -> dict:
+    lens = lens or ((256, 512, 1024) if quick else (1024, 2048, 3072, 4096))
     base = get_config("flowformer_lm")
     base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
                                n_kv_heads=4, d_ff=256, vocab_size=1024,
@@ -57,16 +56,23 @@ def run(*, quick: bool = True, backends: tuple = ("auto",)) -> dict:
 
             fwd = jax.jit(lambda p, b: lm.forward(p, b["inputs"], cfg)[0])
             step = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg)[0]))
-            # per-op try: a backend can support inference but not training
-            # (Pallas kernels have no AD rule), and a working infer number
-            # should survive a failing train bench
+            # per-op try: a backend can reject a (shape, config) cell — a
+            # working infer number should survive a failing train bench
             for col, fn in ((f"infer_{n}", fwd), (f"train_{n}", step)):
                 try:
                     row[col] = round(_bench(fn, params, batch), 2)
-                except Exception as err:  # rejected shapes/config/AD — keep sweeping
-                    lines = str(err).strip().splitlines()
-                    why = lines[0] if lines else type(err).__name__
-                    print(f"  [{name} @ {col}] n/a: {why}")
+                except Exception as err:  # rejected shapes/config — keep sweeping
+                    # a ResolutionError names EVERY candidate's reason; show
+                    # them all so CI logs say why each backend was skipped
+                    rejections = getattr(err, "rejections", ())
+                    if rejections:
+                        print(f"  [{name} @ {col}] n/a:")
+                        for bname, why in rejections:
+                            print(f"    {bname}: {why}")
+                    else:
+                        lines = str(err).strip().splitlines()
+                        why = lines[0] if lines else type(err).__name__
+                        print(f"  [{name} @ {col}] n/a: {why}")
                     row[col] = "n/a"
         rows[name] = row
     cols = [f"{m}_{n}" for m in ("infer", "train") for n in lens]
@@ -98,10 +104,16 @@ if __name__ == "__main__":
     import sys
 
     backends = ("auto",)
+    lens = None
     argv = sys.argv[1:]
     if "--backends" in argv:
         i = argv.index("--backends") + 1
         if i >= len(argv) or argv[i].startswith("--"):
             sys.exit("usage: --backends <name>[,<name>...] | all")
         backends = _parse_backends(argv[i])
-    run(quick="--full" not in argv, backends=backends)
+    if "--lens" in argv:  # e.g. --lens 256,512 (the CI regression gate)
+        i = argv.index("--lens") + 1
+        if i >= len(argv) or argv[i].startswith("--"):
+            sys.exit("usage: --lens <n>[,<n>...]")
+        lens = tuple(int(s) for s in argv[i].split(",") if s)
+    run(quick="--full" not in argv, backends=backends, lens=lens)

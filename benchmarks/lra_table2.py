@@ -5,9 +5,7 @@ synthetic tasks preserve the comparisons (DESIGN.md §8)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import numpy as np
 
 from benchmarks.common import print_table, save_table, train_eval_classifier, with_kind

@@ -1,0 +1,144 @@
+"""Per-backend throughput regression gate for CI.
+
+Compares a fresh ``benchmarks/efficiency_table3.py`` sweep against the
+committed baseline JSON and fails (exit 1) when any backend's steps/s
+regresses more than ``--tolerance`` (default 15%).  Every run also writes a
+dated ``BENCH_<YYYY-MM-DD>.json`` snapshot — the comparison, both tables,
+and the verdict — which CI uploads as an artifact so a regression is
+inspectable without re-running the sweep.
+
+    python -m benchmarks.regression_gate \
+        --current results/bench_efficiency_table3.json \
+        --baseline benchmarks/bench_baseline.json
+
+Baselines are hardware-specific: regenerate with ``--update-baseline`` on
+the CI runner class (or locally for local gating) and commit the result.
+A missing baseline passes with a warning so the gate bootstraps cleanly.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import pathlib
+import sys
+
+
+def _numeric_cells(table: dict) -> dict:
+    """{(row, col): steps_per_s} for the throughput cells of a sweep table."""
+    cells = {}
+    for row_name, row in table.items():
+        for col, val in row.items():
+            if not (col.startswith("infer_") or col.startswith("train_")):
+                continue  # derived columns (slowdown ratios) are not gated
+            if isinstance(val, (int, float)):
+                cells[(row_name, col)] = float(val)
+    return cells
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> dict:
+    """Cell-by-cell comparison; only cells present in BOTH tables gate."""
+    cur = _numeric_cells(current)
+    base = _numeric_cells(baseline)
+    rows = []
+    regressions = []
+    for key in sorted(base):
+        if key not in cur:
+            # a cell the baseline could measure but the current sweep could
+            # not (backend now rejects/raises -> "n/a") is the worst
+            # regression of all — it must fail the gate, not vanish from it
+            entry = {"row": key[0], "col": key[1], "status": "missing",
+                     "baseline": base[key]}
+            rows.append(entry)
+            regressions.append(entry)
+            continue
+        ratio = cur[key] / base[key] if base[key] > 0 else 1.0
+        entry = {
+            "row": key[0], "col": key[1],
+            "baseline": base[key], "current": cur[key],
+            "ratio": round(ratio, 3),
+            "status": "regressed" if ratio < 1.0 - tolerance else "ok",
+        }
+        rows.append(entry)
+        if entry["status"] == "regressed":
+            regressions.append(entry)
+    new_cells = [
+        {"row": k[0], "col": k[1], "current": cur[k], "status": "new"}
+        for k in sorted(cur) if k not in base
+    ]
+    return {
+        "tolerance": tolerance,
+        "compared": len(rows),
+        "regressions": regressions,
+        "cells": rows + new_cells,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current",
+                    default="results/bench_efficiency_table3.json")
+    ap.add_argument("--baseline", default="benchmarks/bench_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max allowed fractional steps/s drop (0.15 = 15%%)")
+    ap.add_argument("--out-dir", default="results",
+                    help="where the dated BENCH_<date>.json snapshot goes")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the current sweep")
+    args = ap.parse_args(argv)
+
+    current_path = pathlib.Path(args.current)
+    if not current_path.exists():
+        print(f"[gate] FAIL: no current sweep at {current_path} "
+              "(run benchmarks.efficiency_table3 first)")
+        return 1
+    current = json.loads(current_path.read_text())
+
+    baseline_path = pathlib.Path(args.baseline)
+    if args.update_baseline:
+        baseline_path.write_text(json.dumps(current, indent=1))
+        print(f"[gate] baseline updated: {baseline_path}")
+        return 0
+
+    date = datetime.date.today().isoformat()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    snapshot_path = out_dir / f"BENCH_{date}.json"
+
+    if not baseline_path.exists():
+        snapshot = {"date": date, "verdict": "no-baseline",
+                    "current": current}
+        snapshot_path.write_text(json.dumps(snapshot, indent=1))
+        print(f"[gate] WARNING: no baseline at {baseline_path}; snapshot "
+              f"written to {snapshot_path}.  Commit one with "
+              "--update-baseline to arm the gate.")
+        return 0
+
+    baseline = json.loads(baseline_path.read_text())
+    result = compare(current, baseline, args.tolerance)
+    verdict = "regressed" if result["regressions"] else "ok"
+    snapshot = {"date": date, "verdict": verdict, **result,
+                "current": current, "baseline": baseline}
+    snapshot_path.write_text(json.dumps(snapshot, indent=1))
+
+    print(f"[gate] compared {result['compared']} cells at "
+          f"{args.tolerance:.0%} tolerance -> {snapshot_path}")
+    for entry in result["regressions"]:
+        if entry["status"] == "missing":
+            print(f"[gate]   MISSING {entry['row']} {entry['col']}: "
+                  f"{entry['baseline']} steps/s in baseline, no measurement "
+                  "now (backend rejected or raised)")
+        else:
+            print(f"[gate]   REGRESSED {entry['row']} {entry['col']}: "
+                  f"{entry['baseline']} -> {entry['current']} steps/s "
+                  f"(x{entry['ratio']})")
+    if verdict == "regressed":
+        print(f"[gate] FAIL: {len(result['regressions'])} cell(s) slower "
+              f"than baseline by more than {args.tolerance:.0%} or missing")
+        return 1
+    print("[gate] OK: no backend regressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

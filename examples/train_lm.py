@@ -8,7 +8,6 @@ configuration (recommended on real accelerators):
     PYTHONPATH=src python examples/train_lm.py --big    # ~110M params
 """
 import argparse
-import dataclasses
 
 from repro.config import AttentionConfig, ModelConfig
 from repro.launch.train import train

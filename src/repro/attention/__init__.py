@@ -32,6 +32,15 @@ Strategy selection
   forward-only strategies) fall back to auto order so pinning a forward
   path never breaks serving.
 
+Gradients: every built-in backend is differentiable end-to-end — the XLA
+strategies natively, the Pallas kernels through the ``jax.custom_vjp``
+rules in ``attention/vjp.py`` (backward passes are Pallas kernels with the
+same chunked-scan structure).  Backends declare the ops ``jax.grad`` flows
+through in ``Backend.differentiable``; ``resolve(..., needs_grad=True)``
+(or ``resolve_for_training``) filters on that declaration and, like all
+resolution failures, raises ``ResolutionError`` whose ``.rejections``
+carries every candidate's own reason.
+
 Registered strategies
 =====================
 * ``pallas_nc``     — non-causal sink side fused in a Pallas TPU kernel
@@ -59,6 +68,10 @@ register it — no call site changes anywhere::
 
     class MyKernel(Backend):
         provides = frozenset({"forward"})
+        # declare {"forward"} once the kernel has a custom VJP; an empty
+        # set (the default) makes resolve(needs_grad=True) skip it with a
+        # "no VJP rule" reason
+        differentiable = frozenset()
 
         def supports(self, cfg, shapes, platform, *, op="forward",
                      explicit=False):
@@ -78,6 +91,7 @@ from repro.core.flow_attention import FlowConfig
 
 from repro.attention.registry import (
     Backend,
+    ResolutionError,
     ShapeInfo,
     explain,
     get_backend,
@@ -85,7 +99,12 @@ from repro.attention.registry import (
     register_backend,
     resolve,
 )
-from repro.attention.api import decode_step, forward, prefill
+from repro.attention.api import (
+    decode_step,
+    forward,
+    prefill,
+    resolve_for_training,
+)
 from repro.attention.dots import causal_dot, causal_dot_grouped
 from repro.attention.recurrent import FlowState, init_state
 from repro.attention._pallas import chunked_causal_dot_pallas
@@ -95,11 +114,13 @@ __all__ = [
     "FlowConfig",
     "FlowState",
     "Backend",
+    "ResolutionError",
     "ShapeInfo",
     "register_backend",
     "get_backend",
     "list_backends",
     "resolve",
+    "resolve_for_training",
     "explain",
     "forward",
     "prefill",

@@ -2,7 +2,9 @@
 
 Shape policing + chunk adjustment live here so the kernels themselves stay
 pure grid/block code.  On CPU the kernels run in interpret mode; on TPU the
-compiled kernels keep the carried state in VMEM.
+compiled kernels keep the carried state in VMEM.  Calls route through the
+``attention/vjp.py`` custom-VJP rules, so ``jax.grad`` through these
+wrappers runs the Pallas backward kernels instead of raising.
 """
 from __future__ import annotations
 
@@ -11,7 +13,7 @@ import functools
 import jax
 
 from repro.attention.fused import effective_chunk
-from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
+from repro.attention.vjp import flow_chunk_dot
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -26,11 +28,11 @@ def chunked_causal_dot_pallas(
     b, h, g, n, d = qg.shape
     dv = v.shape[-1]
     c = effective_chunk(n, chunk)
-    out = flow_chunk_call(
+    out = flow_chunk_dot(
         qg.reshape(b * h, g, n, d),
         k.reshape(b * h, n, d),
         v.reshape(b * h, n, dv),
-        chunk=c,
-        interpret=interp,
+        c,
+        interp,
     )
     return out.reshape(b, h, g, n, dv)

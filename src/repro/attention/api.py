@@ -10,9 +10,23 @@ import dataclasses
 import jax
 
 from repro.core.flow_attention import FlowConfig
-from repro.attention.registry import ShapeInfo, resolve
+from repro.attention.registry import Backend, ShapeInfo, resolve
 
 Array = jax.Array
+
+
+def resolve_for_training(cfg: FlowConfig, shapes: ShapeInfo,
+                         platform: str | None = None) -> Backend:
+    """Resolve the forward strategy that ``jax.grad`` will differentiate.
+
+    Identical to ``resolve(op="forward")`` but requires the backend to
+    self-report gradient capability (``Backend.differentiable`` /
+    ``grad_support``).  Training step builders call this at build time so a
+    forward-only pin fails immediately with every backend's rejection
+    reason (``ResolutionError.rejections``) instead of deep inside
+    ``jax.grad`` tracing.
+    """
+    return resolve(cfg, shapes, platform, op="forward", needs_grad=True)
 
 
 def forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:

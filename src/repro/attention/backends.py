@@ -12,6 +12,12 @@ multi-pass XLA paths wherever its contract (strict causal competition,
 chunkable length) holds; ``xla_cumsum`` accepts everything and is the
 correctness anchor; ``recurrent`` is the canonical decode provider and a
 token-by-token oracle.
+
+Every built-in backend declares gradient capability (``differentiable``):
+the XLA/scan strategies are natively differentiable, and the Pallas kernels
+carry ``jax.custom_vjp`` rules (``attention/vjp.py``) whose backward passes
+are Pallas kernels themselves — so ``resolve(..., needs_grad=True)`` can
+pick any of them and training never needs a registry-side special case.
 """
 from __future__ import annotations
 
@@ -53,6 +59,7 @@ class XlaCumsum(Backend):
     cumsums (causal).  Always applicable — the resolution floor."""
 
     provides = frozenset({"forward", "prefill"})
+    differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         if cfg.causal:
@@ -79,6 +86,7 @@ class XlaChunked(Backend):
     from the former ``core/chunked.py``)."""
 
     provides = frozenset({"forward", "prefill"})
+    differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)
@@ -108,9 +116,11 @@ class XlaChunked(Backend):
 
 class PallasChunk(Backend):
     """Causal aggregation via the ``kernels/flow_chunk`` Pallas TPU kernel
-    (carried (D,Dv) state in VMEM scratch)."""
+    (carried (D,Dv) state in VMEM scratch).  Differentiable through the
+    ``attention/vjp.py`` custom VJP (Pallas backward kernels)."""
 
     provides = frozenset({"forward", "prefill"})
+    differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)
@@ -149,6 +159,7 @@ class PallasNC(Backend):
     reflects that."""
 
     provides = frozenset({"forward"})
+    differentiable = frozenset({"forward"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         if cfg.causal:
@@ -175,6 +186,7 @@ class FusedCausal(Backend):
     free and no (B,H,N) intermediate ever round-trips HBM."""
 
     provides = frozenset({"forward", "prefill"})
+    differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)
@@ -205,6 +217,7 @@ class Recurrent(Backend):
     update under lax.scan as an independent oracle."""
 
     provides = frozenset({"forward", "prefill", "decode"})
+    differentiable = frozenset({"forward", "prefill", "decode"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)

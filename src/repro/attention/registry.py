@@ -19,6 +19,16 @@ Ops are resolved independently: if an explicitly named backend does not
 falls back to full auto order so serving keeps working when a forward
 strategy is pinned.  If the named backend provides the op but rejects the
 shapes/config, resolution raises — pinning is a contract, not a hint.
+
+Gradient capability is part of the same self-reporting: each backend
+declares the ops ``jax.grad`` flows through in ``Backend.differentiable``
+(and may refine the answer in ``grad_support``).  ``resolve(...,
+needs_grad=True)`` filters on that declaration — there is no registry-side
+list of "training backends"; a backend that gains a custom VJP becomes
+trainable by declaring it.  Failed resolution raises ``ResolutionError``
+carrying every candidate's rejection reason both in the message and as
+structured ``.rejections`` — CI and benchmark sweeps report *why* each
+backend was skipped instead of only the last reason.
 """
 from __future__ import annotations
 
@@ -52,19 +62,38 @@ class ShapeInfo:
 class Backend:
     """One Flow-Attention execution strategy.
 
-    Subclasses set ``name`` and ``provides`` and override ``supports`` plus
-    the ops they implement.  ``supports`` must be a *pure* function of
-    (cfg, shapes, platform, op, explicit) so resolution is deterministic.
+    Subclasses set ``name``, ``provides`` and ``differentiable`` and
+    override ``supports`` plus the ops they implement.  ``supports`` must
+    be a *pure* function of (cfg, shapes, platform, op, explicit) so
+    resolution is deterministic.
     """
 
     name: str = "?"
     #: subset of {"forward", "prefill", "decode"} this backend implements
     provides: frozenset = frozenset({"forward"})
+    #: subset of ``provides`` that ``jax.grad`` flows through — natively
+    #: differentiable XLA/scan code or a registered ``jax.custom_vjp``.
+    #: Forward-only kernels leave this empty and are skipped by
+    #: ``resolve(..., needs_grad=True)``.
+    differentiable: frozenset = frozenset()
 
     def supports(self, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
                  *, op: str = "forward", explicit: bool = False):
         """Return (applicable: bool, reason: str)."""
         raise NotImplementedError
+
+    def grad_support(self, op: str = "forward"):
+        """(ok, reason) — whether ``jax.grad`` flows through ``op``.
+
+        The default answer is the declarative ``differentiable`` set;
+        override for shape/config-dependent gradient support.
+        """
+        if op in self.differentiable:
+            return True, f"differentiable {op}"
+        return False, (
+            f"no VJP rule for {op} (forward-only kernel; differentiable "
+            f"ops: {sorted(self.differentiable) or 'none'})"
+        )
 
     # canonical ops ---------------------------------------------------------
     def forward(self, q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
@@ -75,6 +104,16 @@ class Backend:
 
     def decode_step(self, state, q: Array, k: Array, v: Array, cfg: FlowConfig):
         raise NotImplementedError(f"{self.name} does not provide decode_step")
+
+
+class ResolutionError(ValueError):
+    """No backend applied; ``rejections`` is ((name, reason), ...) for every
+    candidate so callers (CI gates, benchmark sweeps) can report each
+    backend's own reason instead of only the last one."""
+
+    def __init__(self, message: str, rejections=()):
+        super().__init__(message)
+        self.rejections = tuple(rejections)
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -129,11 +168,29 @@ def _candidates(cfg: FlowConfig) -> tuple[list, bool]:
     )
 
 
+def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
+           op: str, explicit: bool, needs_grad: bool):
+    """(applicable, reason) for one backend — the single triage sequence
+    (provides -> gradient capability -> supports) shared by ``resolve`` and
+    ``explain`` so their answers can never drift apart."""
+    if op not in be.provides:
+        return False, f"does not provide {op}"
+    if needs_grad:
+        ok, why = be.grad_support(op)
+        if not ok:
+            return False, why
+    return be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+
+
 def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
-            *, op: str = "forward") -> Backend:
+            *, op: str = "forward", needs_grad: bool = False) -> Backend:
     """Deterministically pick the backend that will run ``op``.
 
-    Raises ``ValueError`` with every candidate's rejection reason when
+    ``needs_grad=True`` additionally requires the backend to self-report
+    gradient capability for ``op`` (``grad_support``) — training call sites
+    use it to fail fast at build time instead of inside ``jax.grad``.
+
+    Raises ``ResolutionError`` with every candidate's rejection reason when
     nothing applies — the error is the documentation of why.
     """
     platform = platform or jax.default_backend()
@@ -145,31 +202,27 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
     rejections = []
     for name in names:
         be = _REGISTRY[name]
-        if op not in be.provides:
-            rejections.append(f"{name}: does not provide {op}")
-            continue
-        ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+        ok, why = _judge(be, cfg, shapes, platform, op, explicit, needs_grad)
         if ok:
             return be
-        rejections.append(f"{name}: {why}")
-    raise ValueError(
-        f"no applicable Flow-Attention backend for op={op!r} on "
-        f"platform={platform!r} with {shapes}:\n  " + "\n  ".join(rejections)
+        rejections.append((name, why))
+    raise ResolutionError(
+        f"no applicable Flow-Attention backend for op={op!r}"
+        + (" with gradients" if needs_grad else "")
+        + f" on platform={platform!r} with {shapes}:\n  "
+        + "\n  ".join(f"{n}: {w}" for n, w in rejections),
+        rejections,
     )
 
 
 def explain(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
-            *, op: str = "forward") -> list:
+            *, op: str = "forward", needs_grad: bool = False) -> list:
     """[(name, applicable, reason)] for every registered backend — debugging
     aid and the data source for benchmark sweeps."""
     platform = platform or jax.default_backend()
     _, explicit = _candidates(cfg)
-    out = []
-    for name in _ORDER:
-        be = _REGISTRY[name]
-        if op not in be.provides:
-            out.append((name, False, f"does not provide {op}"))
-            continue
-        ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
-        out.append((name, ok, why))
-    return out
+    return [
+        (name, *_judge(_REGISTRY[name], cfg, shapes, platform, op, explicit,
+                       needs_grad))
+        for name in _ORDER
+    ]

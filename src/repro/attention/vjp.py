@@ -1,0 +1,111 @@
+"""Custom VJP rules that make the Pallas backends differentiable.
+
+``pallas_call`` carries no AD rule, so without this module ``jax.grad``
+through ``pallas_chunk`` / ``pallas_nc`` raises and training must pin an
+XLA/fused backend.  This module closes that gap (ROADMAP "Backward-pass
+kernels"): each raw kernel gets a ``jax.custom_vjp`` whose backward pass is
+itself a Pallas kernel with the same chunked-scan structure as the forward
+— residuals are only the kernel *inputs* (plus the tiny key-side
+reductions for ``flow_nc``), intra-chunk activations are recomputed inside
+the backward kernels, and nothing (B, H, N)-sized is saved between the
+passes.
+
+flow_chunk  (``out[g, i] = q[g, i] . sum_{j<=i} k_j^T v_j``):
+
+    dq — the SAME forward kernel with (k, v) roles swapped:
+         ``dq = flow_chunk_call(g, v, k)`` (the VMEM carry then accumulates
+         ``v^T k = S^T``), so the dq pass inherits the forward's
+         roofline-optimal HBM traffic for free.
+    dk, dv — one reverse chunked scan (``kernels/flow_chunk/bwd.py``)
+         carrying ``U = sum_{later i, g} q[g, i]^T g[g, i]`` in VMEM.
+
+flow_nc (fused non-causal sink side): one backward kernel
+(``kernels/flow_nc/bwd.py``) recomputes the per-row sigmoid/flow chain and
+reduces the key-side cotangents (dk_sum / dko_sum / dkv) across the
+sequential N-block grid axis.
+
+Gradient capability is *declared* per backend (``Backend.differentiable``)
+and enforced by ``registry.resolve(..., needs_grad=True)`` — the registry
+no longer needs any training special-case because every built-in backend
+really is differentiable end-to-end.  Correctness is pinned by
+``tests/test_grad_backends.py`` (``jax.grad`` parity against the XLA
+reference plus finite differences).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flow_chunk.bwd import flow_chunk_dkv_call
+from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
+from repro.kernels.flow_nc.bwd import flow_nc_qside_bwd_call
+from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# flow_chunk: chunked causal aggregation
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flow_chunk_dot(q: Array, k: Array, v: Array, chunk: int,
+                   interpret: bool) -> Array:
+    """Differentiable ``flow_chunk_call``.
+
+    q: (BH, G, N, D); k: (BH, N, D); v: (BH, N, Dv) -> (BH, G, N, Dv).
+    ``chunk`` and ``interpret`` are static (non-differentiable) arguments.
+    """
+    return flow_chunk_call(q, k, v, chunk=chunk, interpret=interpret)
+
+
+def _flow_chunk_fwd(q, k, v, chunk, interpret):
+    out = flow_chunk_call(q, k, v, chunk=chunk, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flow_chunk_bwd(chunk, interpret, residuals, g):
+    q, k, v = residuals
+    # dq[g, i] = sum_{j<=i} (g[g, i] . v_j) k_j — the forward kernel with
+    # swapped operands; its carried state accumulates v^T k = S^T.
+    dq = flow_chunk_call(g, v, k, chunk=chunk, interpret=interpret)
+    dk, dv = flow_chunk_dkv_call(q, k, v, g, chunk=chunk, interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flow_chunk_dot.defvjp(_flow_chunk_fwd, _flow_chunk_bwd)
+
+
+# ---------------------------------------------------------------------------
+# flow_nc: fused non-causal sink side
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def flow_nc_qside(q: Array, k_sum: Array, ko_sum: Array, kv: Array,
+                  n_sinks: int, m_sources: int, eps: float, block: int,
+                  interpret: bool) -> Array:
+    """Differentiable ``flow_nc_qside_call``.
+
+    q: (BH, N, D); k_sum/ko_sum: (BH, D); kv: (BH, D, Dv) -> (BH, N, Dv).
+    The trailing five arguments are static (non-differentiable).
+    """
+    return flow_nc_qside_call(q, k_sum, ko_sum, kv, n_sinks=n_sinks,
+                              m_sources=m_sources, eps=eps, block=block,
+                              interpret=interpret)
+
+
+def _flow_nc_fwd(q, k_sum, ko_sum, kv, n_sinks, m_sources, eps, block,
+                 interpret):
+    out = flow_nc_qside_call(q, k_sum, ko_sum, kv, n_sinks=n_sinks,
+                             m_sources=m_sources, eps=eps, block=block,
+                             interpret=interpret)
+    return out, (q, k_sum, ko_sum, kv)
+
+
+def _flow_nc_bwd(n_sinks, m_sources, eps, block, interpret, residuals, g):
+    q, k_sum, ko_sum, kv = residuals
+    return flow_nc_qside_bwd_call(q, k_sum, ko_sum, kv, g, n_sinks=n_sinks,
+                                  m_sources=m_sources, eps=eps, block=block,
+                                  interpret=interpret)
+
+
+flow_nc_qside.defvjp(_flow_nc_fwd, _flow_nc_bwd)

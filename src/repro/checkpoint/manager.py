@@ -26,7 +26,7 @@ import pathlib
 import shutil
 import threading
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

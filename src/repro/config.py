@@ -129,7 +129,6 @@ class ModelConfig:
         total = v * d  # embedding
         if not self.tie_embeddings and self.family in ("lm", "encdec"):
             total += v * d  # output head
-        n_layers = self.n_layers + self.n_encoder_layers
         for i in range(self.n_layers):
             total += self._block_params(self.block_kind(i))
         for i in range(self.n_encoder_layers):

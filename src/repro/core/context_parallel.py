@@ -110,10 +110,7 @@ def flow_attention_causal_cp(
     eps = cfg.eps
     b, hq, nl, d = q.shape
     hkv = k.shape[1]
-    dv = v.shape[-1]
     idx = jax.lax.axis_index(axis_name)
-    psize = jax.lax.psum(1, axis_name)
-    n_tot = nl * psize
 
     phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
     phi_k = phi_map(k.astype(jnp.float32), cfg.phi)

@@ -55,7 +55,6 @@ import dataclasses
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
 Array = jax.Array
 

@@ -10,8 +10,6 @@ from __future__ import annotations
 
 from typing import Callable, Iterator
 
-import numpy as np
-
 
 class DeterministicLoader:
     def __init__(self, make_batch: Callable[[int], dict], *, start_step: int = 0,

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the chunked causal aggregation kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

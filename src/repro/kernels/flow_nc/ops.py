@@ -3,6 +3,10 @@ sink-side kernel.  The key-side reductions are O(m*d) bandwidth-bound vector
 ops (left to XLA); the sink side — the dominant O(n*d*dv) stream — runs in
 the fused kernel.  Matches ``repro.core.flow_attention.flow_attention_nc``
 (shared-GQA semantics) and is tested against it.
+
+The sink side routes through the ``attention/vjp.py`` custom-VJP rule, and
+the key side is plain (differentiable) XLA, so ``jax.grad`` flows through
+the whole op — q collects cotangents from both paths automatically.
 """
 from __future__ import annotations
 
@@ -12,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flow_attention import FlowConfig, _group, phi_map
-from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -52,15 +55,19 @@ def flow_attention_nc_pallas(
         v_hat = vf
     kv = jnp.einsum("bhmd,bhme->bhde", phi_k, v_hat)  # (B,Hkv,D,Dv)
 
-    # ---- sink side: fused Pallas kernel ----
-    out = flow_nc_qside_call(
+    # ---- sink side: fused Pallas kernel (custom VJP; lazy import keeps the
+    # kernels package importable without a cycle through repro.attention) ----
+    from repro.attention.vjp import flow_nc_qside
+
+    out = flow_nc_qside(
         qg.reshape(b * hkv, g * n, d),
         k_sum.reshape(b * hkv, d),
         ko_sum.reshape(b * hkv, d),
         kv.reshape(b * hkv, d, dv),
-        n_sinks=g * n,
-        m_sources=m,
-        eps=eps,
-        interpret=interp,
+        g * n,
+        m,
+        eps,
+        256,
+        interp,
     )
     return out.reshape(b, hkv, g, n, dv).reshape(b, hq, n, dv)

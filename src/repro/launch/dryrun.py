@@ -21,11 +21,9 @@ Usage:
 import argparse
 import json
 import pathlib
-import re
 import time
 import traceback
 
-import jax
 import numpy as np
 
 from repro.config import LM_SHAPES
@@ -118,7 +116,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # persist the SPMD HLO (gzipped) so the analysis can be re-derived
     # without recompiling
     import gzip
-    import hashlib
 
     hdir = RESULTS / "hlo"
     hdir.mkdir(parents=True, exist_ok=True)

@@ -12,7 +12,6 @@ ShapeDtypeStructs.  ``kind``:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

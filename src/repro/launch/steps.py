@@ -11,11 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, ShapeSpec
 from repro.distribution.sharding import (
@@ -27,7 +26,6 @@ from repro.distribution.sharding import (
 )
 from repro.training.train_state import TrainConfig, TrainState, make_train_step
 from repro.training import optimizer as opt_lib
-from repro.utils import tree_cast
 
 
 def model_loss_fn(cfg: ModelConfig):
@@ -36,6 +34,33 @@ def model_loss_fn(cfg: ModelConfig):
     if cfg.family == "encdec":
         return functools.partial(encdec.loss_fn, cfg=cfg)
     return functools.partial(lm.loss_fn, cfg=cfg)
+
+
+def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec):
+    """Fail fast if the configured flow backend cannot provide gradients.
+
+    Resolves the training forward with ``needs_grad=True`` at build time so
+    a pinned forward-only backend raises here — with every backend's own
+    rejection reason — instead of deep inside ``jax.grad`` tracing.
+    """
+    if cfg.attention.kind != "flow":
+        return None
+    from repro import attention
+    from repro.layers.attention import flow_cfg_of
+
+    if cfg.mla is not None:
+        d = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+        dv, hq, hkv = cfg.mla.v_head_dim, cfg.n_heads, cfg.n_heads
+    else:
+        d = dv = cfg.dim_head
+        hq, hkv = cfg.n_heads, cfg.kv_heads
+    shapes = attention.ShapeInfo(b=max(1, shape.global_batch), hq=hq,
+                                 hkv=hkv, n=shape.seq_len, m=shape.seq_len,
+                                 d=d, dv=dv)
+    be = attention.resolve_for_training(flow_cfg_of(cfg, causal=True), shapes)
+    if cfg.family == "encdec":  # encoder side trains non-causally too
+        attention.resolve_for_training(flow_cfg_of(cfg, causal=False), shapes)
+    return be
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +111,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     from repro.launch.specs import params_shape, train_inputs
 
     plan = plan or RunPlan.choose(cfg, shape, mesh)
+    check_flow_trainable(cfg, shape)  # forward-only backend pins fail here
     tcfg = TrainConfig(microbatch=plan.microbatch, optimizer=plan.optimizer,
                        fused_value_grad=plan.fused_vg)
     if train_overrides:

@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, ShapeSpec
@@ -27,7 +26,7 @@ from repro.data.loader import lm_loader
 from repro.launch.steps import RunPlan, build_train_step
 from repro.models import lm
 from repro.runtime.elastic import StepMonitor
-from repro.training.train_state import TrainState, init_train_state
+from repro.training.train_state import TrainState
 from repro.training import optimizer as opt_lib
 from repro.utils import pretty_count, tree_size
 

@@ -22,13 +22,13 @@ layer never names an execution path.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import attention as flow_backend
-from repro.attention import FlowState, init_state
+from repro.attention import init_state
 from repro.config import ModelConfig
 from repro.core.flow_attention import FlowConfig, phi_map
 from repro.layers.linear import dense, dense_init
@@ -207,9 +207,9 @@ def _local_attn(q, k, v, *, window: int, softcap: float = 0.0) -> Array:
     w = window
     assert n % w == 0, f"seq {n} must be divisible by window {w}"
     nc = n // w
-    pad = lambda t: jnp.concatenate(
-        [jnp.zeros_like(t[:, :, :w]), t], axis=2
-    )
+    def pad(t):
+        return jnp.concatenate([jnp.zeros_like(t[:, :, :w]), t], axis=2)
+
     kp, vp = pad(k), pad(v)
     qc = q.reshape(b, hq, nc, w, d)
     kc = jnp.stack([kp[:, :, i * w : (i + 2) * w] for i in range(nc)], axis=2)

@@ -12,8 +12,6 @@ a fresh non-causal flow attention against the cached encoder keys/values
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

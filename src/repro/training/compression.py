@@ -10,7 +10,6 @@ launch/train.py via ``--grad-compression int8``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -68,8 +67,6 @@ def compressed_psum(grads: PyTree, residual: PyTree, axis_name: str
 
 def make_compressed_allreduce(mesh, dp_axis: str = "data"):
     """jit-able (grads, residual) -> (mean_grads, residual) over ``mesh``."""
-    spec = P(dp_axis)
-
     def fn(grads, residual):
         return compressed_psum(grads, residual, dp_axis)
 

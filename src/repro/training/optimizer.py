@@ -32,7 +32,9 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(master: PyTree) -> AdamWState:
-    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    def zeros(t):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+
     return AdamWState(m=zeros(master), v=zeros(master),
                       step=jnp.zeros((), jnp.int32))
 

@@ -12,18 +12,15 @@ Memory/parallelism strategy (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.config import ModelConfig
 from repro.distribution.sharding import (
     batch_spec,
     to_shardings,
-    tree_param_specs,
     tree_zero1_specs,
 )
 from repro.training import optimizer as opt_lib
@@ -99,7 +96,8 @@ def make_train_step(
         vg_fn = jax.value_and_grad(lambda p, mb: loss_fn(p, mb), argnums=0,
                                    has_aux=True)
         grad_fn = jax.grad(lambda p, mb: loss_fn(p, mb)[0], argnums=0)
-        value_fn = lambda p, mb: loss_fn(p, mb)
+        def value_fn(p, mb):
+            return loss_fn(p, mb)
 
         first = jax.tree.leaves(batch)[0]
         n_micro = tcfg.microbatch and max(1, first.shape[0] // tcfg.microbatch)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Iterator
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp

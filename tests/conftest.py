@@ -1,7 +1,6 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the single real CPU device; multi-device tests spawn subprocesses with
 their own flags (tests/test_sharding.py)."""
-import jax
 import numpy as np
 import pytest
 

@@ -1,11 +1,8 @@
 """Per-architecture smoke tests (deliverable f): every assigned arch
 instantiates a REDUCED same-family config and runs one forward + one train
 step on CPU, asserting output shapes and absence of NaNs."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, PAPER_CONFIGS, get_config, get_smoke_config

@@ -1,12 +1,9 @@
 """Checkpointing: roundtrip, atomicity, GC, async, crash-resume."""
-import json
 import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 
@@ -83,8 +80,8 @@ def test_crash_restart_resumes_training(tmp_path):
                  ckpt_every=2, log_every=100)
 
     # crashy run: 4 steps only (ckpt at 2 and 4), same directory
-    partial = train(cfg, steps=4, batch=2, seq=32, ckpt_dir=str(tmp_path / "b"),
-                    ckpt_every=2, log_every=100)
+    train(cfg, steps=4, batch=2, seq=32, ckpt_dir=str(tmp_path / "b"),
+          ckpt_every=2, log_every=100)
     resumed = train(cfg, steps=6, batch=2, seq=32, ckpt_dir=str(tmp_path / "b"),
                     ckpt_every=2, log_every=100)
     # the resumed run continues from step 4 and matches the uninterrupted run

@@ -1,8 +1,7 @@
 """Data pipeline: determinism, resumability, host sharding, label validity."""
 import numpy as np
-import pytest
 
-from repro.data.loader import DeterministicLoader, lm_loader
+from repro.data.loader import lm_loader
 from repro.data.synthetic import (
     listops,
     pixel_images,

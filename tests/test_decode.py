@@ -1,7 +1,6 @@
 """Recurrent O(d^2) decoding == strict-causal prefill, exactly."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import FlowConfig, decode_step, flow_attention_causal, init_state, prefill

@@ -1,5 +1,4 @@
 """Elastic re-meshing, straggler detection, recovery-loop rebuilds."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -16,7 +16,6 @@ from repro.core.flow_attention import phi_map
 from repro.core.reference import (
     flow_attention_causal_ref,
     flow_attention_nc_ref,
-    softmax_attention_ref,
 )
 
 from conftest import assert_close
@@ -75,7 +74,6 @@ def test_gqa_shared_equals_expand_when_mha():
 # outgoing capacity and each sink's incoming capacity equal 1
 # ---------------------------------------------------------------------------
 def test_conservation_property():
-    eps = 1e-9
     q, k, v = _qkv(4, 1, 1, 1, 40, 30, 16)
     pq = phi_map(q.astype(jnp.float32), "sigmoid")[0, 0]
     pk = phi_map(k.astype(jnp.float32), "sigmoid")[0, 0]
@@ -99,7 +97,6 @@ def test_competition_weights_are_distribution():
     phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
     qg = _group(phi_q, 2)
     k_sum = phi_k.sum(axis=2)
-    q_sum = qg.sum(axis=(2, 3))
     sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + cfg.eps, k_sum + cfg.eps)
     qi = (qg * sink_in[..., None]).sum(axis=(2, 3))
     cons_src = jnp.clip(

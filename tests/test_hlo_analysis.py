@@ -1,7 +1,6 @@
 """HLO parser units: shapes, trip counts, multipliers, collective bytes."""
 import textwrap
 
-import pytest
 
 from repro.launch.hlo_analysis import Module, _shape_bytes
 

@@ -100,7 +100,6 @@ def test_error_feedback_compression_converges():
     n_dev = 4
     resid = [jnp.zeros((32,)) for _ in range(n_dev)]
     total_err = []
-    state = jnp.zeros((32,))
     for step in range(50):
         grads = [jnp.asarray(rng.normal(0, 1, (32,))) for _ in range(n_dev)]
         true_mean = sum(grads) / n_dev

@@ -26,11 +26,12 @@ def test_prefill_decode_matches_forward(arch, kind):
     B, N, T = 2, 32, 6
     if cfg.embedding_frontend == "stub":
         seq = jax.random.normal(jax.random.PRNGKey(1), (B, N + T, cfg.d_model))
-        take = lambda s, e: seq[:, s:e]
     else:
         seq = jax.random.randint(jax.random.PRNGKey(1), (B, N + T), 0,
                                  cfg.vocab_size)
-        take = lambda s, e: seq[:, s:e]
+
+    def take(s, e):
+        return seq[:, s:e]
 
     logits_full, _ = lm.forward(params, seq, cfg, dtype=jnp.float32)
     lg, caches = lm.prefill(params, take(0, N), cfg, max_len=N + T,
