@@ -94,9 +94,14 @@ def run(*, quick: bool = True, backends: tuple = ("auto",),
 
 def _parse_backends(arg: str) -> tuple:
     if arg == "all":
-        from repro.attention import list_backends
+        from repro.attention import get_backend, list_backends
 
-        return ("auto",) + list_backends()
+        # only forward-providing strategies: a pinned decode-only backend
+        # (pallas_decode) would silently fall back to auto for forward and
+        # publish a mislabeled row
+        return ("auto",) + tuple(
+            n for n in list_backends() if "forward" in get_backend(n).provides
+        )
     return tuple(s for s in arg.split(",") if s)
 
 

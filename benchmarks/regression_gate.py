@@ -1,15 +1,24 @@
 """Per-backend throughput regression gate for CI.
 
-Compares a fresh ``benchmarks/efficiency_table3.py`` sweep against the
-committed baseline JSON and fails (exit 1) when any backend's steps/s
-regresses more than ``--tolerance`` (default 15%).  Every run also writes a
-dated ``BENCH_<YYYY-MM-DD>.json`` snapshot — the comparison, both tables,
-and the verdict — which CI uploads as an artifact so a regression is
-inspectable without re-running the sweep.
+Compares fresh benchmark sweeps against the committed baseline JSON and
+fails (exit 1) when any cell's steps/s (or serving tokens/s) regresses more
+than ``--tolerance`` (default 15%).  Every run also writes a dated
+``BENCH_<YYYY-MM-DD>.json`` snapshot — the comparison, both tables, and the
+verdict — which CI uploads as an artifact so a regression is inspectable
+without re-running the sweep.
+
+``--current`` accepts a comma-separated list of sweep files whose row
+tables are merged before comparison (row names are disjoint by
+construction: ``flow[pallas_chunk]`` from the table-3 sweep,
+``paged[s4]`` from the serving sweep):
 
     python -m benchmarks.regression_gate \
-        --current results/bench_efficiency_table3.json \
+        --current results/bench_efficiency_table3.json,results/bench_serving_bench.json \
         --baseline benchmarks/bench_baseline.json
+
+Gated cells are the ``infer_*`` / ``train_*`` columns (steps/s, table 3)
+and ``serve_*`` columns (decode tokens/s, serving bench); derived columns
+(slowdown ratios, trends) ride along ungated.
 
 Baselines are hardware-specific: regenerate with ``--update-baseline`` on
 the CI runner class (or locally for local gating) and commit the result.
@@ -24,16 +33,36 @@ import pathlib
 import sys
 
 
+_GATED_PREFIXES = ("infer_", "train_", "serve_")
+
+
 def _numeric_cells(table: dict) -> dict:
-    """{(row, col): steps_per_s} for the throughput cells of a sweep table."""
+    """{(row, col): throughput} for the gated cells of a sweep table."""
     cells = {}
     for row_name, row in table.items():
         for col, val in row.items():
-            if not (col.startswith("infer_") or col.startswith("train_")):
-                continue  # derived columns (slowdown ratios) are not gated
+            if not col.startswith(_GATED_PREFIXES):
+                continue  # derived columns (slowdown ratios, trends) ungated
             if isinstance(val, (int, float)):
                 cells[(row_name, col)] = float(val)
     return cells
+
+
+def _load_merged(paths: str) -> dict:
+    """Merge the row tables of one or more sweep files (comma-separated)."""
+    merged: dict = {}
+    for p in paths.split(","):
+        if not p:
+            continue
+        path = pathlib.Path(p)
+        if not path.exists():
+            return {}
+        table = json.loads(path.read_text())
+        dup = merged.keys() & table.keys()
+        if dup:
+            raise SystemExit(f"[gate] duplicate row names across sweeps: {dup}")
+        merged.update(table)
+    return merged
 
 
 def compare(current: dict, baseline: dict, tolerance: float) -> dict:
@@ -77,7 +106,8 @@ def compare(current: dict, baseline: dict, tolerance: float) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current",
-                    default="results/bench_efficiency_table3.json")
+                    default="results/bench_efficiency_table3.json",
+                    help="comma-separated sweep files, merged before gating")
     ap.add_argument("--baseline", default="benchmarks/bench_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="max allowed fractional steps/s drop (0.15 = 15%%)")
@@ -87,12 +117,11 @@ def main(argv=None) -> int:
                     help="overwrite the baseline with the current sweep")
     args = ap.parse_args(argv)
 
-    current_path = pathlib.Path(args.current)
-    if not current_path.exists():
-        print(f"[gate] FAIL: no current sweep at {current_path} "
-              "(run benchmarks.efficiency_table3 first)")
+    current = _load_merged(args.current)
+    if not current:
+        print(f"[gate] FAIL: missing current sweep(s) in {args.current} "
+              "(run benchmarks.efficiency_table3 / serving_bench first)")
         return 1
-    current = json.loads(current_path.read_text())
 
     baseline_path = pathlib.Path(args.baseline)
     if args.update_baseline:

@@ -1,0 +1,103 @@
+"""Serving throughput: tokens/s vs slots x context length, flow vs softmax.
+
+Drives the real ``serving.Engine`` (scheduler/worker split, packed prefill,
+fused batched sampling) end-to-end on a small model and measures steady-
+state decode throughput per (variant, slots, context) cell:
+
+  * ``flow``   — O(d^2) recurrent states; the decode cost must stay ~flat
+    in context length (the paper's serving claim).
+  * ``softmax`` — dense max_len KV caches (the unfair-at-long-context
+    baseline Tab. 3 used to compare against).
+  * ``paged``  — softmax served from the paged KV pool
+    (``serving/paged.py``), the PagedAttention-style fair baseline.
+
+Cells are named ``serve_<ctx>`` so ``regression_gate.py`` sweeps them with
+the same tolerance machinery as the training/inference cells, and every
+row gets a ``trend_vs_ctx`` column — throughput ratio shortest/longest
+context (1.0 = perfectly flat), printed as the per-length trend summary.
+
+    python -m benchmarks.serving_bench
+    python -m benchmarks.serving_bench --slots 2,4 --ctxs 64,128 --steps 24
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table, save_table, with_kind
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import Engine, PagedSpec, Request
+
+
+def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
+                paged: PagedSpec | None) -> float:
+    """Steady-state decode tokens/s with every slot live at context ctx."""
+    engine = Engine(params, cfg, slots=slots, max_len=ctx + steps + 8,
+                    paged=paged)
+    rng = np.random.default_rng(0)
+    for i in range(slots):
+        engine.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, ctx).astype(np.int32),
+            max_new_tokens=steps + 2,
+        ))
+    engine.step()  # admission (prefill+install) + decode compile/warm
+    t0 = time.time()
+    done = 0
+    for _ in range(steps):
+        done += engine.step()
+    dt = time.time() - t0
+    return done / dt
+
+
+def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
+        steps: int = 24) -> dict:
+    base = get_config("flowformer_lm")
+    base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
+                               n_kv_heads=4, d_ff=256, vocab_size=1024,
+                               remat=False)
+    page = PagedSpec(page_size=32)
+    variants = [("flow", "flow", None), ("softmax", "softmax", None),
+                ("paged", "softmax", page)]
+    rows = {}
+    for name, kind, paged in variants:
+        cfg = with_kind(base, kind)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        for s in slots:
+            row = {}
+            for ctx in ctxs:
+                row[f"serve_{ctx}"] = round(
+                    _bench_cell(params, cfg, slots=s, ctx=ctx, steps=steps,
+                                paged=paged), 2)
+            row["trend_vs_ctx"] = round(
+                row[f"serve_{ctxs[0]}"] / max(row[f"serve_{ctxs[-1]}"], 1e-9),
+                2)
+            rows[f"{name}[s{s}]"] = row
+    cols = [f"serve_{c}" for c in ctxs] + ["trend_vs_ctx"]
+    print_table("Serving: decode tokens/s by slots x context", rows, cols)
+    print("\n[trend] decode throughput ratio ctx "
+          f"{ctxs[0]} -> {ctxs[-1]} (1.0 = flat in context length):")
+    for name, row in rows.items():
+        print(f"[trend]   {name:14s} x{row['trend_vs_ctx']}")
+    save_table("serving_bench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    kw = {}
+    argv = sys.argv[1:]
+    if "--slots" in argv:
+        kw["slots"] = tuple(
+            int(s) for s in argv[argv.index("--slots") + 1].split(","))
+    if "--ctxs" in argv:
+        kw["ctxs"] = tuple(
+            int(s) for s in argv[argv.index("--ctxs") + 1].split(","))
+    if "--steps" in argv:
+        kw["steps"] = int(argv[argv.index("--steps") + 1])
+    run(**kw)

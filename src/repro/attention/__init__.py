@@ -17,7 +17,7 @@ Strategy selection
 * ``"auto"`` (default) — first applicable backend in preference order::
 
       pallas_nc > pallas_chunk > fused_causal > xla_chunked > xla_cumsum
-      > recurrent
+      > pallas_decode > recurrent
 
   Each backend *self-reports* applicability from (config, static shapes,
   platform): Pallas kernels only volunteer on TPU; ``fused_causal`` needs
@@ -56,8 +56,17 @@ Registered strategies
 * ``xla_cumsum``    — unfused normalizers + full-length cumsum aggregation;
   the always-applicable correctness anchor.
 * ``recurrent``     — token-by-token O(d^2) recurrence (absorbed from
-  ``core/decode.py``); canonical ``decode_step`` provider and an
-  independent parity oracle for the others.
+  ``core/decode.py``); decode fallback and an independent parity oracle
+  for the others.
+* ``pallas_decode`` — batched serving decode step (``kernels/flow_decode``):
+  one Pallas grid launch advances the whole (slots, Hkv, D, Dv) state pool
+  in place; resolves ahead of ``recurrent`` for ``decode`` on TPU.
+
+Serving admission additionally uses the ``prefill_packed`` op (provided by
+the cumulative-sum strategies): ``prefill(q, k, v, cfg, lengths=...)``
+consumes a right-padded batch of prompts in one call and gathers each
+row's FlowState at its own boundary — exact because causality keeps
+padding out of every prefix.
 
 Registering a new backend
 =========================

@@ -38,15 +38,24 @@ def forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
     return be.forward(q, k, v, cfg)
 
 
-def prefill(q: Array, k: Array, v: Array, cfg: FlowConfig):
+def prefill(q: Array, k: Array, v: Array, cfg: FlowConfig,
+            *, lengths: Array | None = None):
     """Consume a prompt; return (per-position outputs, decode FlowState).
 
     Forces the serving-grade strict-causal competition (the paper-faithful
     full-length softmax has no autoregressive state).
+
+    ``lengths`` (B,) int serves a right-padded batch of prompts in one call
+    (continuous-batching admission): causality keeps every row exact, and
+    the returned FlowState is gathered at each row's own boundary.  Routed
+    to the ``prefill_packed`` op, which the cumulative-sum strategies
+    provide; outputs at padded positions are garbage and callers gather
+    their own boundary logits.
     """
     cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
-    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="prefill")
-    return be.prefill(q, k, v, cfg)
+    op = "prefill" if lengths is None else "prefill_packed"
+    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op=op)
+    return be.prefill(q, k, v, cfg, lengths=lengths)
 
 
 def decode_step(state, q: Array, k: Array, v: Array, cfg: FlowConfig):

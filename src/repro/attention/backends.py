@@ -3,15 +3,19 @@
 Registration order IS the ``backend="auto"`` preference order:
 
     pallas_nc  > pallas_chunk  > fused_causal  > xla_chunked  > xla_cumsum
-    > recurrent
+    > pallas_decode > recurrent
 
 Pallas backends only self-report applicable on TPU (interpret mode must be
 asked for explicitly); ``fused_causal`` carries the competition normalizer
 and the (D, Dv) aggregation state through one scan and is preferred over the
 multi-pass XLA paths wherever its contract (strict causal competition,
 chunkable length) holds; ``xla_cumsum`` accepts everything and is the
-correctness anchor; ``recurrent`` is the canonical decode provider and a
-token-by-token oracle.
+correctness anchor; ``pallas_decode`` runs the serving hot loop (one grid
+launch over the whole slot pool) ahead of ``recurrent``, which stays the
+decode fallback and a token-by-token oracle.  The pipeline-based causal
+strategies additionally provide ``prefill_packed`` — prefill over a
+right-padded batch of prompts with the ``FlowState`` gathered at each row's
+own boundary (the serving Worker's batched admission path).
 
 Every built-in backend declares gradient capability (``differentiable``):
 the XLA/scan strategies are natively differentiable, and the Pallas kernels
@@ -47,7 +51,7 @@ def _check_causal_self(cfg: FlowConfig, shapes: ShapeInfo):
 
 
 def _check_state_ops(cfg: FlowConfig, op: str):
-    if op in ("prefill", "decode") and not (
+    if op in ("prefill", "prefill_packed", "decode") and not (
         cfg.strict_causal and cfg.use_competition
     ):
         return "recurrent state requires strict_causal competition"
@@ -58,8 +62,8 @@ class XlaCumsum(Backend):
     """Pure-XLA reference strategy: plain sums (non-causal) or full-length
     cumsums (causal).  Always applicable — the resolution floor."""
 
-    provides = frozenset({"forward", "prefill"})
-    differentiable = frozenset({"forward", "prefill"})
+    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         if cfg.causal:
@@ -76,17 +80,17 @@ class XlaCumsum(Backend):
             return pipeline.causal_forward(q, k, v, cfg, _cumsum_dot)
         return pipeline.nc_forward(q, k, v, cfg)
 
-    def prefill(self, q, k, v, cfg):
+    def prefill(self, q, k, v, cfg, *, lengths=None):
         return pipeline.causal_forward(q, k, v, cfg, _cumsum_dot,
-                                       return_state=True)
+                                       return_state=True, lengths=lengths)
 
 
 class XlaChunked(Backend):
     """Causal aggregation as a lax.scan over MXU-friendly chunks (absorbed
     from the former ``core/chunked.py``)."""
 
-    provides = frozenset({"forward", "prefill"})
-    differentiable = frozenset({"forward", "prefill"})
+    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)
@@ -109,9 +113,9 @@ class XlaChunked(Backend):
     def forward(self, q, k, v, cfg):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
 
-    def prefill(self, q, k, v, cfg):
+    def prefill(self, q, k, v, cfg, *, lengths=None):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg),
-                                       return_state=True)
+                                       return_state=True, lengths=lengths)
 
 
 class PallasChunk(Backend):
@@ -119,8 +123,8 @@ class PallasChunk(Backend):
     (carried (D,Dv) state in VMEM scratch).  Differentiable through the
     ``attention/vjp.py`` custom VJP (Pallas backward kernels)."""
 
-    provides = frozenset({"forward", "prefill"})
-    differentiable = frozenset({"forward", "prefill"})
+    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
         why = _check_causal_self(cfg, shapes)
@@ -148,9 +152,9 @@ class PallasChunk(Backend):
     def forward(self, q, k, v, cfg):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
 
-    def prefill(self, q, k, v, cfg):
+    def prefill(self, q, k, v, cfg, *, lengths=None):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg),
-                                       return_state=True)
+                                       return_state=True, lengths=lengths)
 
 
 class PallasNC(Backend):
@@ -206,7 +210,8 @@ class FusedCausal(Backend):
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return fused.fused_causal_forward(q, k, v, cfg)
 
-    def prefill(self, q, k, v, cfg):
+    def prefill(self, q, k, v, cfg, *, lengths=None):
+        assert lengths is None, "fused scan returns the final state only"
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return fused.fused_causal_forward(q, k, v, cfg, return_state=True)
 
@@ -231,7 +236,8 @@ class Recurrent(Backend):
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return recurrent.forward_by_scan(q, k, v, cfg)
 
-    def prefill(self, q, k, v, cfg):
+    def prefill(self, q, k, v, cfg, *, lengths=None):
+        assert lengths is None, "token scan returns the final state only"
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return recurrent.forward_by_scan(q, k, v, cfg, return_state=True)
 
@@ -240,9 +246,36 @@ class Recurrent(Backend):
         return recurrent.decode_step(state, q, k, v, cfg)
 
 
+class PallasDecode(Backend):
+    """Batched decode step via the ``kernels/flow_decode`` Pallas kernel:
+    one grid launch advances the whole (slots, Hkv, D, Dv) state pool —
+    the serving engine's hot loop.  Inference-only by design (no VJP
+    needed: decode never trains), parity-tested against ``recurrent``."""
+
+    provides = frozenset({"decode"})
+    differentiable = frozenset()
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_state_ops(cfg, op)
+        if why:
+            return False, why
+        if shapes.n != 1:
+            return False, f"decode consumes exactly one position, got N={shapes.n}"
+        if platform != "tpu" and not explicit:
+            return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
+        return True, "batched pallas decode kernel"
+
+    def decode_step(self, state, q, k, v, cfg):
+        from repro.kernels.flow_decode import flow_decode_step
+
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return flow_decode_step(state, q, k, v, cfg)
+
+
 register_backend("pallas_nc", PallasNC())
 register_backend("pallas_chunk", PallasChunk())
 register_backend("fused_causal", FusedCausal())
 register_backend("xla_chunked", XlaChunked())
 register_backend("xla_cumsum", XlaCumsum())
 register_backend("recurrent", Recurrent())
+register_backend("pallas_decode", PallasDecode(), before="recurrent")

@@ -90,6 +90,7 @@ def causal_forward(
     dot_fn: DotFn,
     *,
     return_state: bool = False,
+    lengths: Array | None = None,
 ):
     """Causal Flow-Attention (paper Alg. 2) with an injected aggregation.
 
@@ -98,6 +99,13 @@ def causal_forward(
     (B,Hkv,G,N,D) x (B,Hkv,N,D) x (B,Hkv,N,Dv) -> (B,Hkv,G,N,Dv).
     With ``return_state=True`` (requires ``strict_causal``) also returns the
     O(d^2) recurrent ``FlowState`` that decode continues from.
+
+    ``lengths`` (B,) serves right-padded packed prompts: causality means
+    padding can never leak into earlier positions, so each row's TRUE state
+    is simply the cumulative quantities gathered at its own boundary
+    ``lengths[i]-1`` instead of at N-1 (the padded tail is sliced off by a
+    mask for the non-cumulative ``s`` panel).  Outputs at padded positions
+    are garbage by construction; callers gather their own boundary.
     """
     out_dtype = q.dtype
     eps = cfg.eps
@@ -107,6 +115,9 @@ def causal_forward(
         assert cfg.strict_causal and cfg.use_competition, (
             "recurrent decode state requires strict_causal competition"
         )
+    assert lengths is None or return_state, (
+        "per-row lengths only affect the returned FlowState"
+    )
     k, v = expand_kv(q, k, v, cfg)
     hkv = k.shape[1]
 
@@ -165,15 +176,29 @@ def causal_forward(
         if return_state:
             from repro.attention.recurrent import FlowState
 
+            if lengths is None:
+                t = jnp.full((b,), n, dtype=jnp.int32)
+                gat = lambda a: a[:, :, -1, :]  # noqa: E731
+                z_at = z[:, :, -1]
+                k_mask = phi_k
+            else:
+                t = lengths.astype(jnp.int32)
+                li = jnp.maximum(t, 1) - 1  # (B,) boundary index per row
+                gat = lambda a: jnp.take_along_axis(  # noqa: E731
+                    a, li[:, None, None, None], axis=2
+                )[:, :, 0, :]
+                z_at = jnp.take_along_axis(z, li[:, None, None], axis=2)[:, :, 0]
+                valid = (jnp.arange(n) < t[:, None]).astype(jnp.float32)
+                k_mask = phi_k * valid[:, None, :, None]
             state = FlowState(
-                t=jnp.full((b,), n, dtype=jnp.int32),
-                q_sum=q_csum[:, :, -1, :],
-                k_sum=k_csum[:, :, -1, :],
-                ko_sum=ko_csum[:, :, -1, :],
-                qi_sum=qi_csum[:, :, -1, :],
-                z=z[:, :, -1],
+                t=t,
+                q_sum=gat(q_csum),
+                k_sum=gat(k_csum),
+                ko_sum=gat(ko_csum),
+                qi_sum=gat(qi_csum),
+                z=z_at,
                 s=jnp.einsum(
-                    "bhnd,bhne->bhde", phi_k, v_w,
+                    "bhnd,bhne->bhde", k_mask, v_w,
                     preferred_element_type=jnp.float32,
                 ),
             )

@@ -69,7 +69,9 @@ class Backend:
     """
 
     name: str = "?"
-    #: subset of {"forward", "prefill", "decode"} this backend implements
+    #: subset of {"forward", "prefill", "prefill_packed", "decode"} this
+    #: backend implements (``prefill_packed``: right-padded prompt batch
+    #: with the FlowState gathered at per-row boundaries)
     provides: frozenset = frozenset({"forward"})
     #: subset of ``provides`` that ``jax.grad`` flows through — natively
     #: differentiable XLA/scan code or a registered ``jax.custom_vjp``.
@@ -99,7 +101,8 @@ class Backend:
     def forward(self, q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
         raise NotImplementedError(f"{self.name} does not provide forward")
 
-    def prefill(self, q: Array, k: Array, v: Array, cfg: FlowConfig):
+    def prefill(self, q: Array, k: Array, v: Array, cfg: FlowConfig,
+                *, lengths: Array | None = None):
         raise NotImplementedError(f"{self.name} does not provide prefill")
 
     def decode_step(self, state, q: Array, k: Array, v: Array, cfg: FlowConfig):

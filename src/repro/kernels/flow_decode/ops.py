@@ -1,0 +1,69 @@
+"""Jit'd wrapper for the batched decode kernel: FlowState in, FlowState out.
+
+Reshapes the (B, Hkv, ...) state pool and the (B, Hq, 1, D) token into the
+kernel's flattened (BH, ...) layout, launches one grid over every
+(slot, kv head) pair, and reassembles the ``FlowState``.  GQA grouping
+("shared" mode) is native: the G query heads of a kv group ride along as
+the kernel's G axis; "expand" mode is handled by the backend expanding kv
+heads before calling (G becomes 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.attention.recurrent import FlowState
+from repro.core.flow_attention import FlowConfig
+from repro.kernels.flow_decode.flow_decode import flow_decode_call
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def flow_decode_step(
+    state: FlowState, q: Array, k: Array, v: Array, cfg: FlowConfig,
+    *, interpret: bool | None = None,
+) -> tuple[FlowState, Array]:
+    """Advance one token for every slot.
+
+    q: (B, Hq, 1, D); k: (B, Hkv, 1, D); v: (B, Hkv, 1, Dv).
+    Returns (new_state, out (B, Hq, 1, Dv)).
+    """
+    interp = _INTERPRET if interpret is None else interpret
+    b, hq, one, d = q.shape
+    assert one == 1, "decode_step consumes exactly one position"
+    hkv = k.shape[1]
+    g = hq // hkv
+    dv = v.shape[-1]
+    bh = b * hkv
+
+    t = state.t + 1  # (B,) int32, per-slot position counts
+    tf = jnp.broadcast_to(
+        t.astype(jnp.float32)[:, None], (b, hkv)
+    ).reshape(bh, 1)
+    qg = q[:, :, 0].reshape(b, hkv, g, d).reshape(bh, g, d)
+    k2 = k[:, :, 0].reshape(bh, d)
+    v2 = v[:, :, 0].reshape(bh, dv)
+
+    out, k_sum, q_sum, ko_sum, qi_sum, z, s = flow_decode_call(
+        tf, qg, k2, v2,
+        state.k_sum.reshape(bh, d), state.q_sum.reshape(bh, d),
+        state.ko_sum.reshape(bh, d), state.qi_sum.reshape(bh, d),
+        state.z.reshape(bh, 1), state.s.reshape(bh, d, dv),
+        eps=cfg.eps, phi=cfg.phi, use_allocation=cfg.use_allocation,
+        interpret=interp,
+    )
+    new_state = FlowState(
+        t=t,
+        q_sum=q_sum.reshape(b, hkv, d),
+        k_sum=k_sum.reshape(b, hkv, d),
+        ko_sum=ko_sum.reshape(b, hkv, d),
+        qi_sum=qi_sum.reshape(b, hkv, d),
+        z=z.reshape(b, hkv),
+        s=s.reshape(b, hkv, d, dv),
+    )
+    return new_state, out.reshape(b, hq, 1, dv).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Oracle for the batched decode kernel.
+
+The pure-jnp reference for one flow decode step already exists as the
+canonical recurrence — ``repro.attention.recurrent.decode_step`` — so the
+kernel's oracle IS that function (no duplicated math to drift).
+"""
+from repro.attention.recurrent import decode_step as flow_decode_ref
+
+__all__ = ["flow_decode_ref"]

@@ -2,6 +2,12 @@
 
     python -m repro.launch.serve --arch flowformer-lm --smoke \
         --requests 16 --max-new 32
+
+Softmax-mode baselines can serve from the paged KV pool instead of dense
+``max_len`` caches:
+
+    python -m repro.launch.serve --arch flowformer-lm --smoke \
+        --attn softmax --paged --page-size 64
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, PagedSpec, Request
 
 
 def main():
@@ -26,6 +32,15 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy); "
+                    "sampling is one batched draw per step either way")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve softmax KV caches from the paged pool "
+                    "instead of dense max_len caches")
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged pool size (0 = dense-equivalent worst case)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -34,15 +49,18 @@ def main():
             cfg, attention=dataclasses.replace(cfg.attention, kind=args.attn)
         )
     params = lm.init(jax.random.PRNGKey(0), cfg)
+    paged = (PagedSpec(page_size=args.page_size, num_pages=args.num_pages)
+             if args.paged else None)
     engine = Engine(params, cfg, slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8)
+                    max_len=args.prompt_len + args.max_new + 8, paged=paged)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         r = Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size, args.prompt_len
                                         ).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
         reqs.append(r)
         engine.submit(r)
 
@@ -56,6 +74,11 @@ def main():
     total_tokens = sum(len(r.generated) for r in reqs)
     print(f"[serve] {args.requests} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/max(dt,1e-9):.1f} tok/s, {steps} steps)")
+    alloc = engine.worker.allocator
+    if alloc is not None:
+        print(f"[serve] paged KV: page_size={alloc.page_size} "
+              f"pool={alloc.num_pages} pages, {alloc.free_pages} free after "
+              "drain")
     print(f"[serve] sample generation: {reqs[0].generated[:16]}")
 
 

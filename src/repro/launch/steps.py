@@ -225,7 +225,13 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
 
 def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                      plan: RunPlan | None = None):
+                      plan: RunPlan | None = None, *,
+                      fused_sampling: bool = False):
+    """Decode serve step.  ``fused_sampling`` fuses the serving Worker's
+    batched sampler into the same jit (one ``jax.random.categorical`` over
+    the slot batch under per-slot temperatures + live mask), so the
+    distributed step returns sampled tokens instead of logits — the same
+    zero-per-slot-sync contract as ``repro/serving/worker.py``."""
     from repro.launch.specs import decode_inputs, params_shape
     from repro.models import encdec, lm
 
@@ -236,17 +242,37 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
         pspecs = tree_zero1_specs(pshape, mesh)
 
     if cfg.family == "encdec":
+        if fused_sampling:
+            raise ValueError("fused sampling serves lm decoders only")
+
         def decode_fn(params, batch):
             return encdec.decode_step(
                 params, batch["token"], batch["memory"], batch["caches"],
                 cfg, batch["pos"],
             )
+    elif fused_sampling:
+        from repro.serving.worker import sample_tokens
+
+        def decode_fn(params, batch):
+            logits, caches = lm.decode(params, batch["token"],
+                                       batch["caches"], cfg, batch["pos"])
+            tok = sample_tokens(batch["key"], logits, batch["temps"],
+                                batch["live"])
+            return tok, caches
     else:
         def decode_fn(params, batch):
             return lm.decode(params, batch["token"], batch["caches"], cfg,
                              batch["pos"])
 
-    binputs = decode_inputs(cfg, shape)
+    binputs = dict(decode_inputs(cfg, shape))
+    if fused_sampling:
+        b = shape.global_batch
+        sds = jax.ShapeDtypeStruct
+        binputs.update(
+            temps=sds((b,), jnp.float32),
+            live=sds((b,), jnp.bool_),
+            key=jax.eval_shape(lambda: jax.random.PRNGKey(0)),
+        )
     bspec = batch_spec(mesh, shape.global_batch)
     baxis = list(bspec)[0] if len(list(bspec)) else None
 
@@ -259,6 +285,9 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
         return P(*([None] * x.ndim))
 
     batch_specs = jax.tree.map(spec_of, binputs)
+    if fused_sampling:
+        batch_specs["key"] = P(None)  # the PRNG key is replicated, never
+        # batch-sharded (its leading dim can coincide with tiny batches)
     jit_step = jax.jit(
         decode_fn,
         in_shardings=(to_shardings(pspecs, mesh),

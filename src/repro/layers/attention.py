@@ -33,6 +33,7 @@ from repro.config import ModelConfig
 from repro.core.flow_attention import FlowConfig, phi_map
 from repro.layers.linear import dense, dense_init
 from repro.layers.rope import apply_mrope, apply_rope
+from repro.serving.paged import PagedKVCache, PagedSpec, pages_for
 from repro.utils import KeySeq
 
 Array = jax.Array
@@ -298,10 +299,24 @@ def attention(
     return dense(params["wo"], _merge_heads(out))
 
 
-def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Decode-cache for one layer."""
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16, *, paged: PagedSpec | None = None):
+    """Decode-cache for one layer.
+
+    ``paged`` switches standard softmax KV layers to a ``PagedKVCache``
+    pool (see ``repro/serving/paged.py``); flow/linear states and the
+    bounded local ring buffer are unaffected, and MLA keeps its compressed
+    dense cache (already ~an order of magnitude smaller than raw KV).
+    """
     kind = cfg.attention.kind
     hd, nkv = cfg.dim_head, cfg.kv_heads
+    if (paged is not None and kind == "softmax" and cfg.mla is None):
+        p = paged.num_pages or batch * pages_for(max_len, paged.page_size)
+        return PagedKVCache(
+            k=jnp.zeros((p, nkv, paged.page_size, hd), dtype),
+            v=jnp.zeros((p, nkv, paged.page_size, hd), dtype),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
     if cfg.mla is not None:
         m = cfg.mla
         if kind == "flow":
@@ -336,13 +351,22 @@ def attention_decode(
     cfg: ModelConfig,
     *,
     positions: Array | None = None,
+    page_table: Array | None = None,
 ):
-    """One-token decode.  x: (B, 1, d_model) -> (out, new_cache)."""
+    """One-token decode.  x: (B, 1, d_model) -> (out, new_cache).
+
+    ``page_table`` (B, pages_per_slot) maps slots to pool pages when
+    ``cache`` is a ``PagedKVCache`` (ignored otherwise); sentinel entries
+    (== num_pages) drop writes and read masked-off garbage.
+    """
     kind = cfg.attention.kind
     if cfg.mla is not None and kind != "flow":
         return _mla_decode_absorbed(params, x, cache, cfg, positions)
 
     q, k, v = _project_qkv(params, x, cfg, positions)
+
+    if isinstance(cache, PagedKVCache):
+        return _paged_decode(params, q, k, v, cache, cfg, page_table)
 
     if kind == "flow":
         fc = flow_cfg_of(cfg, causal=True)
@@ -379,6 +403,36 @@ def attention_decode(
         kv_len=kv_len[:, None],
     )
     return dense(params["wo"], _merge_heads(out)), KVCache(kc, vc, t + 1)
+
+
+def _paged_decode(params, q, k, v, cache: PagedKVCache, cfg: ModelConfig,
+                  page_table: Array | None):
+    """Softmax decode on the paged pool: scatter this token's K/V into the
+    slot's current page, attend over the gathered page sequence."""
+    assert page_table is not None, "paged decode requires the page table"
+    b = q.shape[0]
+    t = cache.pos  # (B,)
+    page = cache.k.shape[2]
+    max_pages = page_table.shape[1]
+    rows = jnp.arange(b)
+    pid = page_table[rows, jnp.minimum(t // page, max_pages - 1)]  # (B,)
+    off = t % page
+    # sentinel pids are out of range: the scatter drops them (dead slots)
+    kc = cache.k.at[pid, :, off].set(k[:, :, 0].astype(cache.k.dtype))
+    vc = cache.v.at[pid, :, off].set(v[:, :, 0].astype(cache.v.dtype))
+    # logical per-slot cache = its pages in table order; sentinel gathers
+    # clamp into garbage that kv_len masks off
+    kg = kc[page_table]  # (B, max_pages, Hkv, page, D)
+    vg = vc[page_table]
+    hkv = kg.shape[2]
+    kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, max_pages * page, -1)
+    vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, max_pages * page, -1)
+    kv_len = jnp.minimum(t + 1, max_pages * page)  # (B,)
+    out = _softmax_attn(
+        q, kg, vg, causal=False, softcap=cfg.attention.softcap,
+        kv_len=kv_len[:, None],
+    )
+    return dense(params["wo"], _merge_heads(out)), PagedKVCache(kc, vc, t + 1)
 
 
 def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions):
@@ -431,16 +485,25 @@ def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions
 
 def attention_prefill(
     params, x: Array, cfg: ModelConfig, max_len: int, *,
-    positions: Array | None = None,
+    positions: Array | None = None, lengths: Array | None = None,
 ):
-    """Prompt prefill returning (out, cache) for subsequent decode."""
+    """Prompt prefill returning (out, cache) for subsequent decode.
+
+    ``lengths`` (B,) serves a right-padded batch of prompts in one call
+    (the engine's packed admission): causality keeps every true position
+    exact, per-row cache state lands at each row's own boundary, and
+    outputs at padded positions are garbage the caller never reads.  Local
+    attention's ring buffer has no per-row packed form and rejects it.
+    """
     kind = cfg.attention.kind
     b, n, _ = x.shape
     q, k, v = _project_qkv(params, x, cfg, positions)
     if kind == "flow":
         fc = flow_cfg_of(cfg, causal=True)
-        out, state = flow_backend.prefill(q, k, v, fc)
+        out, state = flow_backend.prefill(q, k, v, fc, lengths=lengths)
         return dense(params["wo"], _merge_heads(out)), state
+    pos0 = (jnp.full((b,), n, jnp.int32) if lengths is None
+            else lengths.astype(jnp.int32))
     if kind == "linear":
         out = _linear_attn(q, k, v, causal=True, chunk_size=cfg.attention.chunk_size)
         hq = cfg.n_heads
@@ -448,12 +511,18 @@ def attention_prefill(
             k = jnp.repeat(k, hq // cfg.kv_heads, axis=1)
             v = jnp.repeat(v, hq // cfg.kv_heads, axis=1)
         pk = phi_map(k.astype(jnp.float32), "elu1")
+        if lengths is not None:
+            pk = pk * (jnp.arange(n) < lengths[:, None]
+                       ).astype(jnp.float32)[:, None, :, None]
         s = jnp.einsum("bhnd,bhne->bhde", pk, v.astype(jnp.float32))
         z = pk.sum(axis=2)
-        return dense(params["wo"], _merge_heads(out)), LinearState(
-            s, z, jnp.full((b,), n, jnp.int32)
-        )
+        return dense(params["wo"], _merge_heads(out)), LinearState(s, z, pos0)
     if kind == "local":
+        if lengths is not None:
+            raise NotImplementedError(
+                "packed prefill not supported for local attention "
+                "(per-row ring alignment)"
+            )
         out = _local_attn(q, k, v, window=cfg.attention.window,
                           softcap=cfg.attention.softcap)
         w = min(cfg.attention.window, max_len)
@@ -483,12 +552,9 @@ def attention_prefill(
         # cache precision follows the activations: bf16 serving keeps bf16
         # caches, fp32 parity tests get exact hand-off
         return dense(params["wo"], _merge_heads(out)), MLACache(
-            c_kv.astype(x.dtype), k_rope.astype(x.dtype),
-            jnp.full((b,), n, jnp.int32),
+            c_kv.astype(x.dtype), k_rope.astype(x.dtype), pos0,
         )
     pad = max_len - n
     kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
     vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
-    return dense(params["wo"], _merge_heads(out)), KVCache(
-        kc, vc, jnp.full((b,), n, jnp.int32)
-    )
+    return dense(params["wo"], _merge_heads(out)), KVCache(kc, vc, pos0)

@@ -242,13 +242,17 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode with per-layer caches
 # ---------------------------------------------------------------------------
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *, paged=None):
+    """Per-layer decode caches.  ``paged`` (a ``serving.paged.PagedSpec``)
+    switches standard softmax KV layers to the shared page pool; all other
+    cache kinds are unaffected (flow/linear/rglru/ssd states are already
+    constant-size, local rings already bounded)."""
     caches = []
     for i in range(cfg.n_layers):
         kind = cfg.block_kind(i)
         if kind in ("attn", "local"):
             sub = dataclass_replace_attn(cfg, kind)
-            caches.append(attn_cache_init(sub, batch, max_len))
+            caches.append(attn_cache_init(sub, batch, max_len, paged=paged))
         elif kind == "rglru":
             caches.append(rglru_state_init(cfg, batch))
         elif kind == "ssd":
@@ -269,8 +273,15 @@ def _blocks_list(params, cfg: ModelConfig):
 
 
 def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
-            *, dtype=jnp.bfloat16):
-    """Consume a prompt; return (last-token logits, caches)."""
+            *, dtype=jnp.bfloat16, lengths: Array | None = None):
+    """Consume a prompt; return (last-token logits, caches).
+
+    ``lengths`` (B,) int packs several right-padded prompts into ONE call
+    (continuous-batching admission): every layer is causal or position-wise
+    so padding never leaks into true positions, per-row cache state lands
+    at each row's own boundary, and the returned logits are gathered at
+    position ``lengths[i]-1`` per row.  Only attention-block architectures
+    support packing (rglru/ssd scans return final-position state only)."""
     b, n = inputs.shape[0], inputs.shape[1]
     x = _embed_inputs(params, inputs, cfg, dtype)
     positions = (default_mrope_positions(b, n) if cfg.rope == "mrope"
@@ -282,10 +293,18 @@ def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
         if kind in ("attn", "local"):
             sub = dataclass_replace_attn(cfg, kind)
             y, cache = attention_prefill(bp["attn"], h, sub, max_len,
-                                         positions=positions)
+                                         positions=positions, lengths=lengths)
         elif kind == "rglru":
+            if lengths is not None:
+                raise NotImplementedError(
+                    "packed prefill not supported for rglru layers"
+                )
             y, cache = rglru_prefill(bp["rglru"], h, cfg)
         else:
+            if lengths is not None:
+                raise NotImplementedError(
+                    "packed prefill not supported for ssd layers"
+                )
             y, cache = ssd_prefill(bp["ssd"], h, cfg)
         caches.append(cache)
         x = x + y
@@ -297,16 +316,24 @@ def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
             x = x + y2
     x = apply_norm(params["final_norm"], x, cfg.norm)
     head = params["embed"] if cfg.tie_embeddings else params["head"]
-    logits = unembed(head, x[:, -1:], softcap=cfg.logit_softcap)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:  # each row's boundary token, not the padded tail
+        li = jnp.maximum(lengths.astype(jnp.int32), 1) - 1
+        x_last = jnp.take_along_axis(x, li[:, None, None], axis=1)
+    logits = unembed(head, x_last, softcap=cfg.logit_softcap)
     return logits, caches
 
 
 def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
-           *, dtype=jnp.bfloat16):
+           *, dtype=jnp.bfloat16, page_table: Array | None = None):
     """One decode step.  token: (B, 1) int or (B, 1, d) stub embedding.
 
     pos: () or (B,) int32 — absolute position(s) of this token (per-slot
     under continuous batching).
+    page_table: (B, pages_per_slot) int32 slot->page mapping, required when
+    the caches are paged (``init_caches(..., paged=...)``); one table
+    serves every layer.
     Returns (logits (B,1,vocab), new_caches)."""
     b = token.shape[0]
     x = _embed_inputs(params, token, cfg, dtype)
@@ -324,7 +351,8 @@ def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
         if kind in ("attn", "local"):
             sub = dataclass_replace_attn(cfg, kind)
             y, cache = attention_decode(bp["attn"], h, caches[i], sub,
-                                        positions=positions)
+                                        positions=positions,
+                                        page_table=page_table)
         elif kind == "rglru":
             y, cache = rglru_decode(bp["rglru"], h, caches[i], cfg)
         else:

@@ -8,34 +8,39 @@ same bytes regardless of how long its context is, so
   * context length never evicts anyone (a 500k-token conversation and an
     8-token one occupy identical state),
   * prefill can run chunked with bounded memory and its state hand-off to
-    the decode batch is a single tree-copy into the slot index.
+    the decode batch is a single scatter into the slot pool.
 
-``Engine`` implements the standard continuous-batching loop: a FIFO of
-requests, a fixed-width slot array, per-step admit -> decode -> retire.
-Softmax-mode engines (KV caches) work through the same interface with
-``max_len``-bounded caches, for baseline comparisons (Tab. 3 at scale).
+``Engine`` is the thin facade over a scheduler/worker split:
+
+  * ``Scheduler`` (``scheduler.py``) — host-side control plane: FIFO queue,
+    slot table, per-request bookkeeping.  Cheap, irregular, pure numpy.
+  * ``Worker`` (``worker.py``) — device-resident data plane: the slot-
+    batched cache pool, a packed-prefill admission path (every queued
+    prompt right-padded into ONE chunked-prefill call, installed by one
+    scatter), and a fused decode+sample step (one
+    ``jax.random.categorical`` over the slot batch with per-slot
+    temperatures and a live mask).  On TPU the flow decode resolves to the
+    batched ``pallas_decode`` kernel — one grid launch per step for the
+    whole pool.
+
+The hot loop performs zero per-slot host syncs: one device call and one
+sampled-token transfer per step, regardless of slot count.
+
+Softmax-mode engines (KV caches) work through the same interface for
+baseline comparisons (Tab. 3 at scale); ``paged=PagedSpec(...)`` switches
+their dense ``max_len`` caches to the paged pool in ``paged.py`` so the
+baseline's memory also tracks live tokens instead of worst case.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models import lm
+from repro.serving.paged import PagedSpec
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.worker import Worker
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (L,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    # filled by the engine:
-    generated: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["Engine", "Request", "PagedSpec"]
 
 
 class Engine:
@@ -43,96 +48,116 @@ class Engine:
     same prefill/decode jit functions via launch/steps.py)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
-                 max_len: int = 4096, seed: int = 0):
-        self.params = params
+                 max_len: int = 4096, seed: int = 0,
+                 paged: PagedSpec | bool | None = None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
-        self.queue: deque[Request] = deque()
-        self.active: list[Request | None] = [None] * slots
-        self.finished: list[Request] = []
-        self.caches = lm.init_caches(cfg, slots, max_len)
-        self.pos = np.zeros(slots, np.int64)
-        self._rng = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(
-            lambda p, tok, caches, pos: lm.decode(p, tok, caches, cfg, pos)
-        )
-        self._prefill = jax.jit(
-            lambda p, toks: lm.prefill(p, toks, cfg, max_len)
-        )
+        if paged is True:
+            paged = PagedSpec()
+        self.scheduler = Scheduler(slots)
+        self.worker = Worker(params, cfg, slots=slots, max_len=max_len,
+                             paged=paged or None, seed=seed)
+
+    # -- facade conveniences (examples/tests poke at these) -------------
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def active(self):
+        return self.scheduler.active
+
+    @property
+    def pos(self):
+        return self.scheduler.pos
+
+    @property
+    def caches(self):
+        return self.worker.caches
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
     def _admit(self):
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, caches = self._prefill(self.params, toks)
-            first = self._sample(logits[:, -1], req)
-            req.generated.append(int(first))
-            if len(req.generated) >= req.max_new_tokens:
-                # budget met by the prefill-sampled token: retire without
-                # ever occupying a slot
-                req.done = True
-                self.finished.append(req)
-                continue
-            self._install(slot, caches)
-            self.pos[slot] = len(req.prompt)
-            self.active[slot] = req
+        """Fill free slots from the queue.
 
-    def _install(self, slot: int, caches):
-        """Copy a batch-1 cache pytree into slot ``slot`` of the batch array."""
-        def put(dst, src):
-            if not hasattr(dst, "ndim") or dst.ndim == 0:
-                return dst  # scalar counters stay global (per-slot pos below)
-            if dst.shape and src.shape and dst.shape[0] == self.slots:
-                return dst.at[slot].set(src[0].astype(dst.dtype))
-            return dst
-
-        self.caches = jax.tree.map(put, self.caches, caches)
-
-    def _sample(self, logits, req: Request) -> int:
-        if req.temperature <= 0:
-            return int(jnp.argmax(logits[-1] if logits.ndim > 1 else logits))
-        self._rng, k = jax.random.split(self._rng)
-        return int(jax.random.categorical(k, logits / req.temperature))
+        Loops until slots or queue run dry: a request whose budget is met
+        by its prefill-sampled token retires WITHOUT occupying its slot,
+        and the freed slot is re-offered to the queue in the same call (no
+        one-step slot leak).  Each round is one packed prefill + one
+        scatter install + one batched first-token sample."""
+        sched, worker = self.scheduler, self.worker
+        while True:
+            free = sched.free_slots()
+            if not free or not sched.queue:
+                return
+            batch, slot_ids, spans, reserved = [], [], [], 0
+            while sched.queue and len(batch) < len(free):
+                req = sched.queue[0]
+                # reserve the request's whole span (prompt + decode budget)
+                # so an admitted request can never exhaust the pool
+                # mid-decode; the engine contract caps it at max_len
+                span = min(len(req.prompt) + req.max_new_tokens - 1,
+                           self.max_len)
+                if worker.pages_needed(span) > worker.total_pages:
+                    if batch:
+                        # admit the requests collected so far first; the
+                        # poisoned head fails at the start of the next
+                        # round (with an empty batch), losing nobody
+                        break
+                    # no amount of retirement can ever free enough: fail
+                    # the request loudly WITHOUT wedging the FIFO behind it
+                    sched.queue.popleft()
+                    sched.retire(req)  # done=True, nothing generated
+                    raise ValueError(
+                        f"request {req.uid}: {len(req.prompt)} prompt + "
+                        f"{req.max_new_tokens} budget tokens need "
+                        f"{worker.pages_needed(span)} pages but the pool "
+                        f"holds {worker.total_pages} total"
+                    )
+                if not worker.can_admit(span, reserved):
+                    break  # paged pool full: FIFO order holds, retry later
+                reserved += worker.pages_needed(span)
+                sched.queue.popleft()
+                batch.append(req)
+                slot_ids.append(free[len(batch) - 1])
+                spans.append(span)
+            if not batch:
+                return
+            temps = np.array([r.temperature for r in batch], np.float32)
+            first = worker.prefill([r.prompt for r in batch], slot_ids, temps,
+                                   spans=spans)
+            for req, slot, tok in zip(batch, slot_ids, first):
+                req.generated.append(int(tok))
+                if len(req.generated) >= req.max_new_tokens:
+                    # budget met by the prefill token: retire immediately;
+                    # the slot stays free and the outer loop re-offers it
+                    sched.retire(req)
+                    worker.release_slot(slot)
+                else:
+                    sched.activate(slot, req)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One continuous-batching iteration; returns #active slots."""
         self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
+        sched = self.scheduler
+        live = sched.live_mask()
+        n_live = int(live.sum())
+        if n_live == 0:
             return 0
-        tok = np.zeros((self.slots, 1), np.int32)
-        for i in live:
-            tok[i, 0] = self.active[i].generated[-1]
-        # flow/recurrent states are position-free; softmax caches use the
-        # max live position (paddings masked by per-cache pos counters)
-        pos = jnp.asarray(int(self.pos[live].max()))
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tok), self.caches, pos
-        )
-        for i in live:
-            req = self.active[i]
-            nxt = self._sample(np.asarray(logits)[i, 0], req)
-            req.generated.append(nxt)
-            self.pos[i] += 1
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self.active[i] = None
-                self.finished.append(req)
-        return len(live)
+        tokens = self.worker.step(sched.last_tokens(), sched.pos,
+                                  sched.temps, live)
+        for slot in sched.record_step(tokens, live):
+            self.worker.release_slot(slot)
+        return n_live
 
     def take_finished(self) -> list[Request]:
         """Drain retired requests (keeps engine memory bounded over a long
         serving lifetime — retirees are held only until collected)."""
-        out, self.finished = self.finished, []
-        return out
+        return self.scheduler.take_finished()
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive the loop until every queued request retires (or max_steps);

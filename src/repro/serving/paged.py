@@ -1,0 +1,139 @@
+"""Paged KV allocation for softmax-mode serving baselines.
+
+Flow-Attention's O(d^2) state needs none of this — every slot costs
+constant bytes.  The softmax baseline, however, was paying a dense
+``(slots, Hkv, max_len, D)`` cache per layer regardless of how long each
+context actually is, which made the Tab. 3 serving comparison unfair at
+long max_len.  This module gives the baseline the standard
+PagedAttention-style fix:
+
+* ``PagedKVCache`` — K/V live in a pool of fixed-size pages
+  ``(num_pages, Hkv, page_size, D)`` shared by all slots; a slot's logical
+  cache is the sequence of pages its page-table row names.
+* ``PageAllocator`` — host-side page table + free list.  Admission maps a
+  request's whole span (prompt + decode budget, so an admitted request can
+  never exhaust the pool mid-decode) and retirement returns the pages to
+  the free list, so resident bytes track COMMITTED tokens instead of
+  ``slots * max_len``.
+
+The device side is deliberately simple: the page table is a host numpy
+array handed to the jitted decode step each call (``lm.decode(...,
+page_table=...)``); invalid entries use the out-of-range sentinel
+``num_pages`` so scatters to unmapped pages drop and gathers clamp into
+masked-off garbage.  One table serves every layer (all layers cache the
+same positions); each layer owns its own page pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Paged-cache geometry for a softmax-mode engine.
+
+    ``num_pages == 0`` sizes the pool to the dense-equivalent worst case
+    (``slots * ceil(max_len / page_size)``) — never runs out, still pays
+    only for mapped pages in practice.  A smaller pool turns admission
+    into real allocation: the engine reserves each request's full
+    prompt+budget span at admission, so requests wait in the queue when
+    the pool is tight (and a request that could NEVER fit fails fast)
+    instead of crashing mid-decode.
+    """
+
+    page_size: int = 64
+    num_pages: int = 0
+
+
+class PagedKVCache(NamedTuple):
+    """One layer's paged K/V pool.  Indexed by (page, head, offset)."""
+
+    k: Array  # (P, Hkv, page_size, D)
+    v: Array  # (P, Hkv, page_size, Dv)
+    pos: Array  # (S,) int32 — tokens written per slot
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    return -(-tokens // page_size)
+
+
+class PageAllocator:
+    """Host-side free list + page table (sentinel ``num_pages`` = unmapped)."""
+
+    def __init__(self, spec: PagedSpec, slots: int, max_len: int):
+        self.page_size = spec.page_size
+        self.pages_per_slot = pages_for(max_len, spec.page_size)
+        self.num_pages = spec.num_pages or slots * self.pages_per_slot
+        self.sentinel = self.num_pages
+        self.free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        self.table = np.full((slots, self.pages_per_slot), self.sentinel,
+                             np.int32)
+        self.mapped = np.zeros(slots, np.int64)  # pages mapped per slot
+
+    # ------------------------------------------------------------------
+    def can_admit(self, length: int) -> bool:
+        return len(self.free) >= pages_for(max(length, 1), self.page_size)
+
+    def admit(self, slot: int, length: int):
+        """Map pages for a ``length``-token span into ``slot`` (the engine
+        passes prompt + decode budget so decode never allocates)."""
+        self.release(slot)
+        need = pages_for(max(length, 1), self.page_size)
+        if len(self.free) < need:
+            raise RuntimeError(
+                f"paged KV pool exhausted: need {need} pages for slot {slot}, "
+                f"{len(self.free)} free of {self.num_pages}"
+            )
+        for j in range(need):
+            self.table[slot, j] = self.free.pop()
+        self.mapped[slot] = need
+
+    def ensure(self, slot: int, upto_pos: int):
+        """Guarantee a mapped page for writing position ``upto_pos``
+        (safety net — admission's full-span reservation normally makes
+        this a no-op).  A slot at its row capacity (``upto_pos`` beyond
+        ``max_len``) stops growing: the device write then clamps into the
+        last page, mirroring the dense cache's end-of-cache clamp instead
+        of crashing or stealing pages past the row."""
+        while (self.mapped[slot] < self.pages_per_slot
+               and self.mapped[slot] * self.page_size <= upto_pos):
+            if not self.free:
+                raise RuntimeError(
+                    f"paged KV pool exhausted mid-decode at slot {slot} "
+                    f"position {upto_pos} ({self.num_pages} pages total)"
+                )
+            self.table[slot, self.mapped[slot]] = self.free.pop()
+            self.mapped[slot] += 1
+
+    def release(self, slot: int):
+        """Return a slot's pages to the free list (request retirement)."""
+        n = int(self.mapped[slot])
+        for j in range(n):
+            self.free.append(int(self.table[slot, j]))
+        self.table[slot, :] = self.sentinel
+        self.mapped[slot] = 0
+
+    # ------------------------------------------------------------------
+    def install_indices(self, slots: list[int], lengths: list[int],
+                        padded_len: int):
+        """(page_ids, offsets) each (R, padded_len) for scattering the
+        prompt K/V of freshly admitted slots into the pools; positions at
+        or beyond a row's length point at the sentinel (scatter drops)."""
+        r = len(slots)
+        pids = np.full((r, padded_len), self.sentinel, np.int32)
+        offs = np.zeros((r, padded_len), np.int32)
+        for i, (slot, length) in enumerate(zip(slots, lengths)):
+            idx = np.arange(length)
+            pids[i, :length] = self.table[slot, idx // self.page_size]
+            offs[i, :length] = idx % self.page_size
+        return pids, offs
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)

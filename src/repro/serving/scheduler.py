@@ -1,0 +1,89 @@
+"""Host-side serving control plane: FIFO admission + retirement bookkeeping.
+
+The ``Scheduler`` owns everything that is cheap and irregular — the request
+queue, the slot table, per-request token lists, temperatures, positions —
+and NOTHING that lives on the accelerator.  Its counterpart, the
+``Worker`` (``repro/serving/worker.py``), owns everything device-resident
+and regular.  The split keeps the decode hot loop free of per-slot host
+work: the scheduler hands the worker flat numpy arrays (tokens, positions,
+temperatures, live mask) and receives one numpy array of sampled tokens
+back per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine:
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    """FIFO queue + fixed-width slot table (pure host state)."""
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.finished: list[Request] = []
+        self.pos = np.zeros(slots, np.int64)  # positions consumed per slot
+        self.temps = np.zeros(slots, np.float32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def live_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.active])
+
+    def last_tokens(self) -> np.ndarray:
+        """(slots,) int32 — each live slot's most recent token (0 if dead)."""
+        tok = np.zeros(self.slots, np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                tok[i] = r.generated[-1]
+        return tok
+
+    # ------------------------------------------------------------------
+    def activate(self, slot: int, req: Request):
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.temps[slot] = req.temperature
+
+    def retire(self, req: Request):
+        req.done = True
+        self.finished.append(req)
+
+    def record_step(self, tokens: np.ndarray, live: np.ndarray) -> list[int]:
+        """Fold one decode step's sampled tokens into the bookkeeping.
+
+        Appends per-slot tokens, advances positions, retires requests whose
+        budget is met; returns the slot ids freed this step (the caller
+        releases their device/page resources)."""
+        freed = []
+        for i in np.flatnonzero(live):
+            req = self.active[i]
+            req.generated.append(int(tokens[i]))
+            self.pos[i] += 1
+            if len(req.generated) >= req.max_new_tokens:
+                self.retire(req)
+                self.active[i] = None
+                freed.append(int(i))
+        return freed
+
+    def take_finished(self) -> list[Request]:
+        out, self.finished = self.finished, []
+        return out

@@ -1,0 +1,289 @@
+"""Device-resident serving data plane: packed prefill + fused decode/sample.
+
+The ``Worker`` owns the slot-batched cache pool and exactly three jitted
+computations:
+
+* ``step``    — ONE call per engine iteration: decode every slot (the flow
+  layers resolve to the batched ``pallas_decode`` kernel on TPU) and sample
+  the whole slot batch with a single ``jax.random.categorical`` under a
+  per-slot temperature vector and live mask.  The only host transfer per
+  step is the sampled token vector — zero per-slot syncs.
+* ``prefill`` — packed admission: every queued prompt in the admission
+  batch is right-padded into one ``(R, Lb)`` chunked-prefill call
+  (``lm.prefill(..., lengths=...)``, exact by causality), the resulting
+  per-row caches are installed into their slots by one jitted scatter, and
+  the first tokens are sampled with the same batched sampler.
+* a per-request fallback prefill for architectures whose recurrences
+  cannot pack (rglru/ssd scans, local-attention rings) — same scatter
+  install, batch of one.
+
+Paged softmax caches (``serving/paged.py``) ride the same paths: the
+host-side allocator maps pages at admission/page boundaries and the page
+table is handed to the jitted step as a plain array input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attention.recurrent import FlowState
+from repro.config import ModelConfig
+from repro.layers.attention import KVCache, LinearState, MLACache
+from repro.models import lm
+from repro.models.lm import dataclass_replace_attn
+from repro.serving.paged import (
+    PageAllocator,
+    PagedKVCache,
+    PagedSpec,
+    pages_for,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Batched sampling (shared with launch/steps.py's fused serve step)
+# ---------------------------------------------------------------------------
+def sample_tokens(key, logits: Array, temps: Array, live: Array) -> Array:
+    """One device-side draw for the whole slot batch.
+
+    logits: (S, V) or (S, 1, V); temps: (S,) — greedy where <= 0; live:
+    (S,) bool.  Greedy and temperature slots share one batched
+    ``jax.random.categorical`` (the categorical draw is computed for every
+    row; greedy rows select the argmax instead — no per-slot branching,
+    no per-slot host syncs)."""
+    if logits.ndim == 3:  # normalize shape once, both sampling modes agree
+        logits = logits[:, -1]
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    tok = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+    return jnp.where(live, tok, 0)
+
+
+def _packable(cfg: ModelConfig) -> bool:
+    """Can prompts be right-padded into one prefill call?  True when every
+    layer either supports per-row boundary states (flow/softmax/MLA/linear
+    attention) or does not exist in the stack (rglru/ssd scans and local
+    rings return final-position state only)."""
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        if kind in ("rglru", "ssd"):
+            return False
+        sub = dataclass_replace_attn(cfg, kind)
+        if sub.attention.kind == "local":
+            return False
+    return True
+
+
+def _has_pageable_layers(cfg: ModelConfig) -> bool:
+    if cfg.mla is not None:
+        return False
+    for i in range(cfg.n_layers):
+        if cfg.block_kind(i) in ("attn", "local"):
+            sub = dataclass_replace_attn(cfg, cfg.block_kind(i))
+            if sub.attention.kind == "softmax":
+                return True
+    return False
+
+
+def _bucket_len(n: int, max_len: int) -> int:
+    """Pad admission batches to power-of-two buckets (bounded jit cache)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return max(min(b, max_len), n)
+
+
+# ---------------------------------------------------------------------------
+# One-scatter slot install
+# ---------------------------------------------------------------------------
+def _install_layer(dst, src, slot_ids, pids, offs):
+    """Scatter an admission batch's layer cache (R rows) into the slot-wide
+    pool.  Out-of-range slot ids / sentinel page ids drop, so callers can
+    pad the admission batch freely."""
+    if isinstance(dst, PagedKVCache):
+        # src is the dense (R, Hkv, L, D) prefill cache; flatten into pages
+        l = src.k.shape[2]
+        kt = src.k.transpose(0, 2, 1, 3).astype(dst.k.dtype)  # (R, L, Hkv, D)
+        vt = src.v.transpose(0, 2, 1, 3).astype(dst.v.dtype)
+        return PagedKVCache(
+            k=dst.k.at[pids[:, :l], :, offs[:, :l]].set(kt),
+            v=dst.v.at[pids[:, :l], :, offs[:, :l]].set(vt),
+            pos=dst.pos.at[slot_ids].set(src.pos.astype(dst.pos.dtype)),
+        )
+    if isinstance(dst, KVCache):
+        l = src.k.shape[2]
+        return KVCache(
+            k=dst.k.at[slot_ids, :, :l].set(src.k.astype(dst.k.dtype)),
+            v=dst.v.at[slot_ids, :, :l].set(src.v.astype(dst.v.dtype)),
+            pos=dst.pos.at[slot_ids].set(src.pos.astype(dst.pos.dtype)),
+        )
+    if isinstance(dst, MLACache):
+        l = src.c_kv.shape[1]
+        return MLACache(
+            c_kv=dst.c_kv.at[slot_ids, :l].set(src.c_kv.astype(dst.c_kv.dtype)),
+            k_rope=dst.k_rope.at[slot_ids, :l].set(
+                src.k_rope.astype(dst.k_rope.dtype)),
+            pos=dst.pos.at[slot_ids].set(src.pos.astype(dst.pos.dtype)),
+        )
+    if isinstance(dst, (FlowState, LinearState)):
+        return type(dst)(*[
+            d.at[slot_ids].set(s.astype(d.dtype))
+            for d, s in zip(dst, src)
+        ])
+    # generic batch-led state tree (rglru conv+lru states, ssd states)
+    return jax.tree.map(
+        lambda d, s: d.at[slot_ids].set(s.astype(d.dtype)), dst, src
+    )
+
+
+def _install(caches, new, slot_ids, pids, offs):
+    return [
+        _install_layer(dst, src, slot_ids, pids, offs)
+        for dst, src in zip(caches, new)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Worker
+# ---------------------------------------------------------------------------
+class Worker:
+    """Owns params + the device-resident cache pool; every method that
+    touches the device is one jitted call."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
+                 paged: PagedSpec | None = None, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.packable = _packable(cfg)
+        self.paged = paged if (paged and _has_pageable_layers(cfg)) else None
+        self.allocator = (PageAllocator(self.paged, slots, max_len)
+                          if self.paged else None)
+        self.caches = lm.init_caches(cfg, slots, max_len, paged=self.paged)
+        self._key = jax.random.PRNGKey(seed)
+        self._draws = 0
+
+        def step_fn(params, tok, caches, pos, table, temps, live, key, draw):
+            logits, caches = lm.decode(params, tok, caches, cfg, pos,
+                                       page_table=table)
+            tokens = sample_tokens(jax.random.fold_in(key, draw),
+                                   logits, temps, live)
+            return tokens, caches
+
+        def prefill_fn(params, toks, lens, slot_ids, caches, pids, offs,
+                       temps, key, draw):
+            logits, new = lm.prefill(params, toks, cfg,
+                                     max_len=toks.shape[1], lengths=lens)
+            caches = _install(caches, new, slot_ids, pids, offs)
+            live = jnp.ones(toks.shape[0], bool)
+            first = sample_tokens(jax.random.fold_in(key, draw),
+                                  logits, temps, live)
+            return first, caches
+
+        def prefill_one_fn(params, toks, slot_ids, caches, pids, offs,
+                           temps, key, draw):
+            logits, new = lm.prefill(params, toks, cfg, max_len=max_len)
+            caches = _install(caches, new, slot_ids, pids, offs)
+            first = sample_tokens(jax.random.fold_in(key, draw),
+                                  logits, temps, jnp.ones(1, bool))
+            return first, caches
+
+        self._step = jax.jit(step_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(4,))
+        self._prefill_one = jax.jit(prefill_one_fn, donate_argnums=(3,))
+
+    # ------------------------------------------------------------------
+    def _next_draw(self) -> int:
+        self._draws += 1
+        return self._draws
+
+    def pages_needed(self, length: int) -> int:
+        if self.allocator is None:
+            return 0
+        return pages_for(max(length, 1), self.allocator.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        return self.allocator.num_pages if self.allocator else 0
+
+    def can_admit(self, length: int, reserved: int = 0) -> bool:
+        """``reserved`` accounts for pages already promised to earlier
+        requests of the same admission batch (allocation happens at
+        prefill, after the whole batch is planned)."""
+        return (self.allocator is None or
+                self.allocator.free_pages >= reserved + self.pages_needed(length))
+
+    def release_slot(self, slot: int):
+        if self.allocator is not None:
+            self.allocator.release(slot)
+
+    # ------------------------------------------------------------------
+    def prefill(self, prompts: list[np.ndarray], slot_ids: list[int],
+                temps: np.ndarray, *, spans: list[int] | None = None
+                ) -> np.ndarray:
+        """Admit a batch of prompts into ``slot_ids``; returns their first
+        sampled tokens (one host transfer for the whole batch).
+
+        ``spans`` — per-request page reservation in tokens (prompt + decode
+        budget); pages for the whole span are mapped up front so an
+        admitted request can never exhaust the pool mid-decode."""
+        lens = [len(p) for p in prompts]
+        if self.allocator is not None:
+            for slot, span in zip(slot_ids, spans or lens):
+                self.allocator.admit(slot, span)
+        if self.packable:
+            lb = _bucket_len(max(lens), self.max_len)
+            toks = np.zeros((len(prompts), lb), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, : len(p)] = p
+            pids = offs = None
+            if self.allocator is not None:
+                pids, offs = self.allocator.install_indices(slot_ids, lens, lb)
+            first, self.caches = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens, jnp.int32),
+                jnp.asarray(slot_ids, jnp.int32), self.caches,
+                None if pids is None else jnp.asarray(pids),
+                None if offs is None else jnp.asarray(offs),
+                jnp.asarray(temps, jnp.float32), self._key, self._next_draw(),
+            )
+            return np.asarray(first)
+        # fallback: one prefill per request (rglru/ssd/local stacks)
+        firsts = np.zeros(len(prompts), np.int32)
+        for i, (p, slot) in enumerate(zip(prompts, slot_ids)):
+            pids = offs = None
+            if self.allocator is not None:
+                pids, offs = self.allocator.install_indices(
+                    [slot], [len(p)], self.max_len
+                )
+            first, self.caches = self._prefill_one(
+                self.params, jnp.asarray(p, jnp.int32)[None],
+                jnp.asarray([slot], jnp.int32), self.caches,
+                None if pids is None else jnp.asarray(pids),
+                None if offs is None else jnp.asarray(offs),
+                jnp.asarray(temps[i : i + 1], jnp.float32),
+                self._key, self._next_draw(),
+            )
+            firsts[i] = np.asarray(first)[0]
+        return firsts
+
+    # ------------------------------------------------------------------
+    def step(self, tokens: np.ndarray, pos: np.ndarray, temps: np.ndarray,
+             live: np.ndarray) -> np.ndarray:
+        """One fused decode+sample over the whole slot pool."""
+        table = None
+        if self.allocator is not None:
+            for slot in np.flatnonzero(live):
+                self.allocator.ensure(int(slot), int(pos[slot]))
+            table = jnp.asarray(self.allocator.table)
+        toks, self.caches = self._step(
+            self.params, jnp.asarray(tokens, jnp.int32)[:, None], self.caches,
+            jnp.asarray(pos, jnp.int32), table,
+            jnp.asarray(temps, jnp.float32), jnp.asarray(live),
+            self._key, self._next_draw(),
+        )
+        return np.asarray(toks)  # the step's single host transfer

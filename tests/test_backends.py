@@ -8,6 +8,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro import attention
@@ -171,3 +172,92 @@ def test_register_backend_duplicate_rejected():
     with pytest.raises(ValueError, match="already registered"):
         attention.register_backend("xla_cumsum",
                                    attention.get_backend("xla_cumsum"))
+
+
+# ---------------------------------------------------------------------------
+# batched decode kernel (pallas_decode)
+# ---------------------------------------------------------------------------
+def test_pallas_decode_resolution_order():
+    """pallas_decode resolves ahead of recurrent for decode on TPU and
+    never volunteers off-TPU (interpret must be pinned explicitly)."""
+    sh = ShapeInfo(b=4, hq=4, hkv=2, n=1, m=1, d=16, dv=16)
+    cfg = FlowConfig(causal=True, strict_causal=True)
+    assert attention.resolve(cfg, sh, "tpu", op="decode").name == "pallas_decode"
+    assert attention.resolve(cfg, sh, "cpu", op="decode").name == "recurrent"
+    # the legacy pallas family pin selects it explicitly (interpret off-TPU)
+    pinned = dataclasses.replace(cfg, backend="pallas")
+    assert attention.resolve(pinned, sh, "cpu", op="decode").name == "pallas_decode"
+    # forward auto-resolution is untouched by the decode-only backend
+    fwd = ShapeInfo(b=1, hq=2, hkv=2, n=64, m=64, d=8, dv=8)
+    assert attention.resolve(cfg, fwd, "tpu").name == "pallas_chunk"
+
+
+@pytest.mark.parametrize("gqa", ["shared", "expand"])
+def test_pallas_decode_matches_recurrent_with_churn(gqa):
+    """64+ decode steps of slot churn: the batched kernel tracks the
+    recurrent oracle through periodic per-slot state re-installs (the
+    engine's admit/retire pattern)."""
+    b, hq, hkv, d, dv = 3, 4, 2, 16, 8
+    base = FlowConfig(causal=True, strict_causal=True, chunk_size=16,
+                      gqa_mode=gqa)
+    cfg_r = dataclasses.replace(base, backend="recurrent")
+    cfg_p = dataclasses.replace(base, backend="pallas_decode")
+    n_state = hq if gqa == "expand" else hkv
+    st_r = st_p = attention.init_state(b, n_state, d, dv)
+    for step in range(68):
+        q, k, v = _qkv(1000 + step, b, hq, hkv, 1, d, dv)
+        st_r, o_r = attention.decode_step(st_r, q, k, v, cfg_r)
+        st_p, o_p = attention.decode_step(st_p, q, k, v, cfg_p)
+        assert_close(o_p, o_r, rtol=1e-4, atol=1e-5, msg=f"step {step}")
+        if step % 16 == 7:  # churn: install a fresh prefill state into a slot
+            qp, kp, vp = _qkv(2000 + step, 1, hq, hkv, 32, d, dv)
+            _, fresh = attention.prefill(qp, kp, vp, base)
+            slot = step % b
+            put = lambda dst, src: dst.at[slot].set(  # noqa: E731
+                src[0].astype(dst.dtype))
+            st_r = jax.tree.map(put, st_r, fresh)
+            st_p = jax.tree.map(put, st_p, fresh)
+    for f in st_r._fields:
+        assert_close(getattr(st_p, f), getattr(st_r, f), rtol=1e-4, atol=1e-5,
+                     msg=f"state field {f}")
+
+
+# ---------------------------------------------------------------------------
+# packed prefill (prefill_packed op)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["xla_cumsum", "xla_chunked",
+                                     "pallas_chunk"])
+def test_prefill_packed_matches_per_row_prefill(backend):
+    """A right-padded batch prefilled in one call hands decode the same
+    per-row FlowState as prefilling each prompt alone (causality keeps
+    padding out of every prefix)."""
+    b, hq, hkv, n, d = 3, 4, 2, 32, 8
+    cfg = FlowConfig(causal=True, strict_causal=True, chunk_size=16,
+                     backend=backend)
+    q, k, v = _qkv(11, b, hq, hkv, n, d)
+    if not _applicable(cfg, q, k, v, op="prefill_packed"):
+        pytest.skip(f"{backend} prefill_packed not applicable")
+    lens = [19, 32, 7]
+    out_p, st_p = attention.prefill(q, k, v, cfg, lengths=jnp.asarray(lens))
+    assert np.asarray(st_p.t).tolist() == lens
+    ref_cfg = dataclasses.replace(cfg, backend="xla_cumsum")  # any length
+    for i, li in enumerate(lens):
+        sl = slice(i, i + 1)
+        out_i, st_i = attention.prefill(q[sl, :, :li], k[sl, :, :li],
+                                        v[sl, :, :li], ref_cfg)
+        assert_close(out_p[sl, :, :li], out_i, rtol=1e-3, atol=1e-4,
+                     msg=f"row {i} outputs")
+        for f in st_i._fields:
+            assert_close(getattr(st_p, f)[sl], getattr(st_i, f),
+                         rtol=1e-3, atol=1e-4, msg=f"row {i} state {f}")
+
+
+def test_prefill_packed_falls_back_past_pinned_fused():
+    """fused_causal cannot gather per-row boundary states; a pinned
+    fused_causal still serves packed admission via the auto fallback."""
+    q, k, v = _qkv(12, 2, 2, 2, 16, 8)
+    cfg = FlowConfig(causal=True, strict_causal=True, chunk_size=16,
+                     backend="fused_causal")
+    out, state = attention.prefill(q, k, v, cfg,
+                                   lengths=jnp.asarray([9, 16]))
+    assert np.asarray(state.t).tolist() == [9, 16]

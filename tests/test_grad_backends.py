@@ -149,7 +149,10 @@ def test_all_builtin_backends_declare_gradients():
         if name.startswith("_test"):  # doubles registered by other tests
             continue
         be = attention.get_backend(name)
-        assert be.differentiable == be.provides, name
+        assert be.differentiable <= be.provides, name
+        # every training-reachable op ships gradients; inference-only ops
+        # (the serving decode kernel) may stay forward-only by design
+        assert be.provides & {"forward", "prefill"} <= be.differentiable, name
 
 
 class _FwdOnly(attention.Backend):
