@@ -10,7 +10,17 @@ Flow rows can sweep execution strategies by registry name:
     python -m benchmarks.efficiency_table3 --backends all
 
 Backends that reject a (shape, config) report ``n/a`` for that cell instead
-of aborting the sweep.
+of aborting the sweep.  The context-parallel backends (``cp_*``) need more
+than one device: run under a forced multi-device host
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.efficiency_table3 --backends cp_causal,cp_nc
+
+and their rows bench under a sharded ExecutionPlan (sequence axis over all
+devices): ``cp_causal`` through the full LM, ``cp_nc`` through the sharded
+non-causal attention op (the LM sweep is causal and the non-causal glue
+rightly rejects it).  On a 1-device host they are skipped gracefully (rows
+omitted with the reason printed), never an error.
 """
 from __future__ import annotations
 
@@ -20,7 +30,9 @@ import time
 import jax
 
 from benchmarks.common import print_table, save_table, with_kind
+from repro.attention import ShardSpec
 from repro.configs import get_config
+from repro.layers.attention import plan_of
 from repro.models import lm
 
 
@@ -33,20 +45,82 @@ def _bench(fn, *args, iters: int = 3) -> float:
     return iters / (time.time() - t0)
 
 
+def _shard_plan_for(cfg, backend: str, *, causal: bool = True):
+    """(plan, skip_reason) for a ``cp_*`` row: a sharded ExecutionPlan over
+    every host device, or the reason the row must be skipped (1-device
+    host).  The sweep keeps going either way."""
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return None, (
+            f"{backend} needs a multi-device host; run with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            f"(found {ndev} device)"
+        )
+    mesh = jax.make_mesh((ndev,), ("seq",))
+    return plan_of(cfg, causal=causal,
+                   shard=ShardSpec(axis="seq", mesh=mesh)), None
+
+
+def _bench_nc_op(cfg, plan, lens: tuple) -> dict:
+    """cp_nc row: the LM sweep is causal and the non-causal glue rightly
+    rejects it, so bench the sharded attention *op* itself (forward and
+    grad steps/s at the same lengths) — the psum glue still gets a real,
+    gateable number every night."""
+    from repro import attention
+
+    d = cfg.d_model // cfg.n_heads
+    ex = attention.resolve(plan)
+    row = {}
+    for n in lens:
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (2, cfg.n_heads, n, d))
+        k = jax.random.normal(ks[1], (2, cfg.n_heads, n, d))
+        v = jax.random.normal(ks[2], (2, cfg.n_heads, n, d))
+        fwd = jax.jit(ex.forward)
+        grad = jax.jit(jax.grad(
+            lambda q, k, v: (ex.forward(q, k, v) ** 2).sum(),
+            argnums=(0, 1, 2)))
+        for col, fn in ((f"infer_{n}", fwd), (f"train_{n}", grad)):
+            try:
+                row[col] = round(_bench(fn, q, k, v), 2)
+            except Exception as err:
+                print(f"  [cp_nc @ {col}] n/a: {err}")
+                row[col] = "n/a"
+    return row
+
+
 def run(*, quick: bool = True, backends: tuple = ("auto",),
-        lens: tuple | None = None) -> dict:
+        lens: tuple | None = None, save_as: str = "efficiency_table3") -> dict:
     lens = lens or ((256, 512, 1024) if quick else (1024, 2048, 3072, 4096))
     base = get_config("flowformer_lm")
     base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
                                n_kv_heads=4, d_ff=256, vocab_size=1024,
                                remat=False)
     variants = [("flow", b) for b in backends]
-    variants += [("softmax", None), ("linear", None)]
+    # a cp-only sweep (the workflow's forced-8-device leg) omits the
+    # softmax/linear baselines: its rows must merge with the main sweep's
+    # at the regression gate, and duplicate row names abort the merge
+    if not all(b and b.startswith("cp_") for b in backends):
+        variants += [("softmax", None), ("linear", None)]
     rows = {}
     for kind, backend in variants:
         over = {"backend": backend} if backend else {}
         cfg = with_kind(base, kind, **over)
         name = kind if backend in (None, "auto") else f"flow[{backend}]"
+        plan = None
+        if backend and backend.startswith("cp_"):
+            nc_only = backend == "cp_nc"
+            plan, skip = _shard_plan_for(cfg, backend, causal=not nc_only)
+            if skip:
+                # graceful: row omitted (so a separate multi-device sweep
+                # can merge its own cp rows at the gate), reason printed
+                print(f"  [{name}] skipped: {skip}")
+                continue
+            if nc_only:  # no causal LM exists for the non-causal glue
+                print(f"  [{name}] benching the sharded non-causal "
+                      "attention op (the LM sweep is causal)")
+                rows[name] = _bench_nc_op(cfg, plan, lens)
+                continue
         params = lm.init(jax.random.PRNGKey(0), cfg)
         row = {}
         for n in lens:
@@ -54,8 +128,10 @@ def run(*, quick: bool = True, backends: tuple = ("auto",),
                                       cfg.vocab_size)
             batch = {"inputs": toks, "targets": toks}
 
-            fwd = jax.jit(lambda p, b: lm.forward(p, b["inputs"], cfg)[0])
-            step = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg)[0]))
+            fwd = jax.jit(
+                lambda p, b: lm.forward(p, b["inputs"], cfg, plan=plan)[0])
+            step = jax.jit(
+                jax.grad(lambda p, b: lm.loss_fn(p, b, cfg, plan=plan)[0]))
             # per-op try: a backend can reject a (shape, config) cell — a
             # working infer number should survive a failing train bench
             for col, fn in ((f"infer_{n}", fwd), (f"train_{n}", step)):
@@ -88,7 +164,7 @@ def run(*, quick: bool = True, backends: tuple = ("auto",),
         rows[name]["slowdown_vs_linear_ideal"] = round(
             max(inf, trn) / ideal, 2
         )
-    save_table("efficiency_table3", rows)
+    save_table(save_as, rows)
     return rows
 
 
@@ -110,6 +186,7 @@ if __name__ == "__main__":
 
     backends = ("auto",)
     lens = None
+    save_as = "efficiency_table3"
     argv = sys.argv[1:]
     if "--backends" in argv:
         i = argv.index("--backends") + 1
@@ -121,4 +198,10 @@ if __name__ == "__main__":
         if i >= len(argv) or argv[i].startswith("--"):
             sys.exit("usage: --lens <n>[,<n>...]")
         lens = tuple(int(s) for s in argv[i].split(",") if s)
-    run(quick="--full" not in argv, backends=backends, lens=lens)
+    if "--save-as" in argv:  # separate sweeps (e.g. the multi-device cp
+        i = argv.index("--save-as") + 1  # leg) merge at the regression gate
+        if i >= len(argv) or argv[i].startswith("--"):
+            sys.exit("usage: --save-as <table-name>")
+        save_as = argv[i]
+    run(quick="--full" not in argv, backends=backends, lens=lens,
+        save_as=save_as)

@@ -29,6 +29,7 @@ import numpy as np
 
 from benchmarks.common import print_table, save_table, with_kind
 from repro.configs import get_config
+from repro.layers.attention import plan_of
 from repro.models import lm
 from repro.serving.engine import Engine, PagedSpec, Request
 
@@ -36,8 +37,10 @@ from repro.serving.engine import Engine, PagedSpec, Request
 def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
                 paged: PagedSpec | None) -> float:
     """Steady-state decode tokens/s with every slot live at context ctx."""
+    # the serving ExecutionPlan, built once per engine like launch/serve.py
+    plan = plan_of(cfg, paged=paged, packed=True)
     engine = Engine(params, cfg, slots=slots, max_len=ctx + steps + 8,
-                    paged=paged)
+                    plan=plan)
     rng = np.random.default_rng(0)
     for i in range(slots):
         engine.submit(Request(

@@ -1,14 +1,45 @@
 """Pluggable Flow-Attention execution subsystem.
 
 This package is the ONLY place in the repo that selects how Flow-Attention
-(paper Eq. 4/7/8, Alg. 2) actually executes.  Call sites use the canonical
-three-op API and never name an execution path:
+(paper Eq. 4/7/8, Alg. 2) actually executes.  Call sites build ONE
+``ExecutionPlan`` (FlowConfig + static shapes + mesh/axis ``ShardSpec`` +
+serving options) at module-construction time and use the canonical
+three-op API through the bound executor — never naming an execution path:
 
     from repro import attention
 
-    out = attention.forward(q, k, v, cfg)          # cfg.causal picks variant
-    out, state = attention.prefill(q, k, v, cfg)   # strict-causal + FlowState
-    state, out = attention.decode_step(state, q, k, v, cfg)
+    plan = attention.ExecutionPlan(flow=cfg)       # + shard=, packed=, ...
+    ex = attention.resolve(plan)                   # -> BoundExecutor
+    out = ex.forward(q, k, v)                      # cfg.causal picks variant
+    out, state = ex.prefill(q, k, v)               # strict-causal + FlowState
+    state, out = ex.decode_step(state, q, k, v)
+
+The per-call module functions ``attention.forward/prefill/decode_step(...,
+FlowConfig)`` remain as deprecation shims (warn once, behave identically);
+passing the ``ExecutionPlan`` in the config position is the supported
+spelling.
+
+Mesh-aware resolution
+=====================
+``ExecutionPlan.shard`` (a ``ShardSpec``: mesh + sequence axis name, and
+optionally a batch axis and a pinned shard-local ``inner`` strategy) makes
+``resolve`` mesh-aware: backends self-report shard capability in
+``Backend.shardable`` / ``shard_support`` exactly as they report gradient
+capability, and a sharded plan binds the context-parallel collective-glue
+backends:
+
+* ``cp_nc``     — non-causal: the six global flow sums become ``psum``s of
+  O(d^2) bytes (sequence-length-independent collectives).
+* ``cp_causal`` — strict-causal: local cumsums + an ``all_gather`` of
+  per-device partials and a local exclusive prefix; wraps a shard-local
+  inner aggregation strategy resolved over the registry (``pallas_chunk``
+  on TPU, ``xla_chunked``/``xla_cumsum`` elsewhere), and provides
+  ``prefill``/``prefill_packed`` so seq-parallel serving admission
+  resolves through the same door.
+
+Single-device backends reject sharded plans with "no collective glue"
+reasons (visible in ``ResolutionError.rejections`` and ``explain(plan)``);
+the ``cp_*`` backends reject *unsharded* plans symmetrically.
 
 Strategy selection
 ==================
@@ -61,6 +92,9 @@ Registered strategies
 * ``pallas_decode`` — batched serving decode step (``kernels/flow_decode``):
   one Pallas grid launch advances the whole (slots, Hkv, D, Dv) state pool
   in place; resolves ahead of ``recurrent`` for ``decode`` on TPU.
+* ``cp_nc`` / ``cp_causal`` — context-parallel collective glue
+  (``attention/cp.py``); candidates only for sharded ExecutionPlans (see
+  "Mesh-aware resolution" above).
 
 Serving admission additionally uses the ``prefill_packed`` op (provided by
 the cumulative-sum strategies): ``prefill(q, k, v, cfg, lengths=...)``
@@ -102,16 +136,24 @@ from repro.attention.registry import (
     Backend,
     ResolutionError,
     ShapeInfo,
-    explain,
+    ShardSpec,
     get_backend,
     list_backends,
     register_backend,
-    resolve,
+)
+from repro.attention.plan import (
+    BoundExecutor,
+    ExecutionPlan,
+    PlanExplanation,
+    explain_plan,
+    resolve_plan,
 )
 from repro.attention.api import (
     decode_step,
+    explain,
     forward,
     prefill,
+    resolve,
     resolve_for_training,
 )
 from repro.attention.dots import causal_dot, causal_dot_grouped
@@ -123,14 +165,20 @@ __all__ = [
     "FlowConfig",
     "FlowState",
     "Backend",
+    "BoundExecutor",
+    "ExecutionPlan",
+    "PlanExplanation",
     "ResolutionError",
     "ShapeInfo",
+    "ShardSpec",
     "register_backend",
     "get_backend",
     "list_backends",
     "resolve",
+    "resolve_plan",
     "resolve_for_training",
     "explain",
+    "explain_plan",
     "forward",
     "prefill",
     "decode_step",

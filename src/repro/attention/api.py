@@ -1,44 +1,135 @@
-"""Canonical Flow-Attention entry points: forward / prefill / decode_step.
+"""Canonical Flow-Attention entry points, plan-first.
 
-Every call site in the repo (layers, models, serving, benchmarks) routes
-through these three functions; the registry picks the execution strategy.
+New code builds one ``ExecutionPlan`` (FlowConfig + shapes + ShardSpec +
+serving options) at module-construction time and executes through the bound
+executor ``resolve(plan)`` returns:
+
+    plan = attention.ExecutionPlan(flow=FlowConfig(causal=True, ...))
+    ex = attention.resolve(plan)
+    out = ex.forward(q, k, v)
+    out, state = ex.prefill(q, k, v, lengths=lens)
+    state, out = ex.decode_step(state, q, k, v)
+
+``resolve``/``explain`` dispatch on their first argument: an
+``ExecutionPlan`` gets the plan-level treatment (mesh-aware, returns a
+``BoundExecutor`` / ``PlanExplanation``); the legacy ``(cfg, shapes,
+platform)`` form still returns a raw ``Backend`` / row list for registry
+introspection.
+
+The original per-call module functions — ``forward(q, k, v, cfg)``,
+``prefill(q, k, v, cfg, lengths=)``, ``decode_step(state, q, k, v, cfg)``
+with a bare ``FlowConfig`` — remain as thin deprecation shims: they build a
+single-call plan, warn once per signature, and behave identically.  Passing
+an ``ExecutionPlan`` in the ``cfg`` position is the supported spelling and
+never warns.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import jax
 
 from repro.core.flow_attention import FlowConfig
-from repro.attention.registry import Backend, ShapeInfo, resolve
+from repro.attention import registry
+from repro.attention.plan import (
+    BoundExecutor,
+    ExecutionPlan,
+    explain_plan,
+    resolve_plan,
+)
+from repro.attention.registry import Backend, ShapeInfo
 
 Array = jax.Array
 
+_WARNED: set[str] = set()
 
-def resolve_for_training(cfg: FlowConfig, shapes: ShapeInfo,
+
+def _warn_once(key: str, msg: str):
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings():
+    """Test hook: make the next legacy call warn again."""
+    _WARNED.clear()
+
+
+def _as_executor(cfg, *, deprecated_key: str) -> BoundExecutor:
+    if isinstance(cfg, ExecutionPlan):
+        return BoundExecutor(cfg)
+    _warn_once(
+        deprecated_key,
+        f"attention.{deprecated_key}(..., FlowConfig) is deprecated: build "
+        "an ExecutionPlan once (attention.ExecutionPlan(flow=cfg, ...)) and "
+        "call resolve(plan)." + deprecated_key + "(...) — plans carry "
+        "shard/packed/paged context that per-call kwargs cannot",
+    )
+    return BoundExecutor(ExecutionPlan(flow=cfg))
+
+
+def resolve(cfg_or_plan, shapes: ShapeInfo | None = None,
+            platform: str | None = None, *, op: str = "forward",
+            needs_grad: bool = False, shard=None):
+    """Plan-first: ``resolve(plan) -> BoundExecutor``.
+
+    Legacy registry form: ``resolve(cfg, shapes, platform, op=...,
+    needs_grad=..., shard=...) -> Backend`` (unchanged semantics; ``shard``
+    makes it mesh-aware).
+    """
+    if isinstance(cfg_or_plan, ExecutionPlan):
+        return resolve_plan(cfg_or_plan)
+    return registry.resolve(cfg_or_plan, shapes, platform, op=op,
+                            needs_grad=needs_grad, shard=shard)
+
+
+def explain(cfg_or_plan, shapes: ShapeInfo | None = None,
+            platform: str | None = None, *, op: str = "forward",
+            needs_grad: bool = False, shard=None):
+    """Plan-first: ``explain(plan) -> PlanExplanation`` (printable report
+    with the shard axis and per-backend ``shard_support`` verdicts).
+
+    Legacy form returns ``[(name, applicable, reason)]`` rows.
+    """
+    if isinstance(cfg_or_plan, ExecutionPlan):
+        return explain_plan(cfg_or_plan, op=op)
+    return registry.explain(cfg_or_plan, shapes, platform, op=op,
+                            needs_grad=needs_grad, shard=shard)
+
+
+def resolve_for_training(cfg_or_plan, shapes: ShapeInfo | None = None,
                          platform: str | None = None) -> Backend:
     """Resolve the forward strategy that ``jax.grad`` will differentiate.
 
-    Identical to ``resolve(op="forward")`` but requires the backend to
-    self-report gradient capability (``Backend.differentiable`` /
-    ``grad_support``).  Training step builders call this at build time so a
+    Accepts an ``ExecutionPlan`` (its ``needs_grad`` is forced on and the
+    bound forward backend returned) or the legacy ``(cfg, shapes,
+    platform)`` form.  Training step builders call this at build time so a
     forward-only pin fails immediately with every backend's rejection
     reason (``ResolutionError.rejections``) instead of deep inside
     ``jax.grad`` tracing.
     """
-    return resolve(cfg, shapes, platform, op="forward", needs_grad=True)
+    if isinstance(cfg_or_plan, ExecutionPlan):
+        import dataclasses
+
+        plan = dataclasses.replace(cfg_or_plan, needs_grad=True)
+        return BoundExecutor(plan).backend("forward")
+    return registry.resolve(cfg_or_plan, shapes, platform, op="forward",
+                            needs_grad=True)
 
 
-def forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
-    """Full-sequence Flow-Attention; ``cfg.causal`` selects the variant.
+def forward(q: Array, k: Array, v: Array, cfg) -> Array:
+    """Full-sequence Flow-Attention; the plan's (or config's) ``causal``
+    selects the variant.
 
     q: (B, Hq, N, D); k: (B, Hkv, M, D); v: (B, Hkv, M, Dv) -> (B, Hq, N, Dv).
+    ``cfg`` may be an ``ExecutionPlan`` (preferred) or a bare ``FlowConfig``
+    (deprecated shim, warns once).
     """
-    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="forward")
-    return be.forward(q, k, v, cfg)
+    return _as_executor(cfg, deprecated_key="forward").forward(q, k, v)
 
 
-def prefill(q: Array, k: Array, v: Array, cfg: FlowConfig,
+def prefill(q: Array, k: Array, v: Array, cfg,
             *, lengths: Array | None = None):
     """Consume a prompt; return (per-position outputs, decode FlowState).
 
@@ -48,22 +139,22 @@ def prefill(q: Array, k: Array, v: Array, cfg: FlowConfig,
     ``lengths`` (B,) int serves a right-padded batch of prompts in one call
     (continuous-batching admission): causality keeps every row exact, and
     the returned FlowState is gathered at each row's own boundary.  Routed
-    to the ``prefill_packed`` op, which the cumulative-sum strategies
-    provide; outputs at padded positions are garbage and callers gather
-    their own boundary logits.
+    to the ``prefill_packed`` op; outputs at padded positions are garbage
+    and callers gather their own boundary logits.  ``cfg`` may be an
+    ``ExecutionPlan`` (preferred) or a bare ``FlowConfig`` (deprecated
+    shim, warns once).
     """
-    cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
-    op = "prefill" if lengths is None else "prefill_packed"
-    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op=op)
-    return be.prefill(q, k, v, cfg, lengths=lengths)
+    return _as_executor(cfg, deprecated_key="prefill").prefill(
+        q, k, v, lengths=lengths)
 
 
-def decode_step(state, q: Array, k: Array, v: Array, cfg: FlowConfig):
+def decode_step(state, q: Array, k: Array, v: Array, cfg):
     """Advance one token on the O(d^2) recurrent state.
 
     q: (B, Hq, 1, D); k: (B, Hkv, 1, D); v: (B, Hkv, 1, Dv).
-    Returns (new_state, out (B, Hq, 1, Dv)).
+    Returns (new_state, out (B, Hq, 1, Dv)).  ``cfg`` may be an
+    ``ExecutionPlan`` (preferred) or a bare ``FlowConfig`` (deprecated
+    shim, warns once).
     """
-    cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
-    be = resolve(cfg, ShapeInfo.from_qkv(q, k, v), op="decode")
-    return be.decode_step(state, q, k, v, cfg)
+    return _as_executor(cfg, deprecated_key="decode_step").decode_step(
+        state, q, k, v)

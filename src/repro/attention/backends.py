@@ -3,7 +3,12 @@
 Registration order IS the ``backend="auto"`` preference order:
 
     pallas_nc  > pallas_chunk  > fused_causal  > xla_chunked  > xla_cumsum
-    > pallas_decode > recurrent
+    > pallas_decode > recurrent > cp_nc > cp_causal
+
+(the ``cp_*`` context-parallel glue backends are ``shard_only``: they are
+candidates only when resolution carries a ``ShardSpec`` — where every
+single-device backend is rejected with a "no collective glue" reason — so
+their position in the order never affects unsharded plans).
 
 Pallas backends only self-report applicable on TPU (interpret mode must be
 asked for explicitly); ``fused_causal`` carries the competition normalizer
@@ -75,6 +80,11 @@ class XlaCumsum(Backend):
             return False, why
         return True, "universal fallback"
 
+    def causal_dot_fn(self, cfg):
+        """Grouped causal aggregation dot — also the shard-local inner
+        strategy the context-parallel glue (``attention/cp.py``) wraps."""
+        return _cumsum_dot
+
     def forward(self, q, k, v, cfg):
         if cfg.causal:
             return pipeline.causal_forward(q, k, v, cfg, _cumsum_dot)
@@ -109,6 +119,9 @@ class XlaChunked(Backend):
     def _dot(self, cfg):
         return functools.partial(chunked_causal_dot_grouped,
                                  chunk_size=cfg.chunk_size)
+
+    # chunked scan doubles as the cp shard-local inner strategy
+    causal_dot_fn = _dot
 
     def forward(self, q, k, v, cfg):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
@@ -148,6 +161,9 @@ class PallasChunk(Backend):
 
         return functools.partial(chunked_causal_dot_pallas,
                                  chunk=cfg.chunk_size)
+
+    # the Pallas kernel doubles as the cp shard-local inner strategy
+    causal_dot_fn = _dot
 
     def forward(self, q, k, v, cfg):
         return pipeline.causal_forward(q, k, v, cfg, self._dot(cfg))
@@ -279,3 +295,10 @@ register_backend("xla_chunked", XlaChunked())
 register_backend("xla_cumsum", XlaCumsum())
 register_backend("recurrent", Recurrent())
 register_backend("pallas_decode", PallasDecode(), before="recurrent")
+
+# context-parallel collective glue (attention/cp.py): only candidates for
+# sharded ExecutionPlans, rejected everywhere else (shard_only)
+from repro.attention.cp import ContextParallelCausal, ContextParallelNC  # noqa: E402
+
+register_backend("cp_nc", ContextParallelNC())
+register_backend("cp_causal", ContextParallelCausal())

@@ -1,0 +1,210 @@
+"""ExecutionPlan: everything the registry needs to bind execution, in one
+object built once at module-construction time.
+
+Before this existed, every call site threaded execution context as ad-hoc
+kwargs per call — backend pins in ``FlowConfig.backend``, ``lengths=`` for
+packed admission, ``paged=``/``page_table=`` for the softmax baseline
+caches, mesh axis names for sequence parallelism — through layers → models
+→ launch → serving.  An ``ExecutionPlan`` folds the *static* decisions
+together:
+
+* ``flow``   — the Flow-Attention math + strategy selector (``FlowConfig``)
+* ``shapes`` — optional static call shapes (filled from q/k/v when absent)
+* ``shard``  — optional ``ShardSpec``: mesh + sequence axis for
+  context-parallel execution; makes resolution mesh-aware
+* ``packed`` — the plan intends right-padded multi-prompt prefill
+  (``prefill_packed``); the per-call ``lengths`` array stays a runtime arg
+* ``paged``  — serving option (a ``serving.paged.PagedSpec``) carried for
+  the softmax-baseline cache layers; ignored by flow execution
+* ``needs_grad`` / ``platform`` — resolution filters
+
+``resolve(plan)`` returns a ``BoundExecutor`` whose three canonical ops
+(``forward`` / ``prefill`` / ``decode_step``) resolve through the registry
+with the plan applied — a sharded plan lands on the context-parallel
+backends (``cp_nc``/``cp_causal``), an unsharded one behaves exactly like
+the legacy per-call API.  ``explain(plan)`` renders the same triage as a
+human-readable report including each backend's ``shard_support`` verdict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.flow_attention import FlowConfig
+from repro.attention import registry
+from repro.attention.registry import Backend, ShapeInfo, ShardSpec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static execution context for Flow-Attention, hashable (jit-static).
+
+    ``flow`` may be ``None`` in model-level plans (layers fill it from
+    ``ModelConfig.attention`` per block); attention-level users set it.
+    """
+
+    flow: FlowConfig | None = None
+    shapes: ShapeInfo | None = None
+    shard: ShardSpec | None = None
+    packed: bool = False
+    paged: Any = None  # serving.paged.PagedSpec for softmax baseline caches
+    needs_grad: bool = False
+    platform: str | None = None
+
+    def with_shapes(self, shapes: ShapeInfo) -> "ExecutionPlan":
+        return dataclasses.replace(self, shapes=shapes)
+
+    def with_flow(self, flow: FlowConfig) -> "ExecutionPlan":
+        return dataclasses.replace(self, flow=flow)
+
+    def describe(self) -> str:
+        bits = [f"backend={self.flow.backend!r}" if self.flow else "flow=?"]
+        if self.shard is not None:
+            bits.append(f"shard[{self.shard.describe()}]")
+        if self.packed:
+            bits.append("packed")
+        if self.paged is not None:
+            bits.append(f"paged[{getattr(self.paged, 'page_size', '?')}]")
+        if self.needs_grad:
+            bits.append("needs_grad")
+        return "ExecutionPlan(" + ", ".join(bits) + ")"
+
+
+class BoundExecutor:
+    """The three canonical ops bound to one ``ExecutionPlan``.
+
+    Resolution happens per op at trace time (pure python, deterministic);
+    the plan's shard/grad/platform context is applied uniformly so call
+    sites never re-thread it.  ``decode_step`` drops the shard: a decode
+    step consumes one position — there is no sequence axis left to shard,
+    and the O(d^2) state is batch-led.
+    """
+
+    def __init__(self, plan: ExecutionPlan):
+        if plan.flow is None:
+            raise ValueError(
+                "ExecutionPlan.flow is unset — attention-level execution "
+                "needs the FlowConfig (model layers fill it from "
+                "ModelConfig.attention)"
+            )
+        self.plan = plan
+
+    @property
+    def flow(self) -> FlowConfig:
+        return self.plan.flow
+
+    def _shapes(self, q, k, v) -> ShapeInfo:
+        return ShapeInfo.from_qkv(q, k, v)
+
+    def backend(self, op: str = "forward",
+                shapes: ShapeInfo | None = None) -> Backend:
+        """Resolve and return the backend the plan binds for ``op``."""
+        p = self.plan
+        shapes = shapes or p.shapes
+        if shapes is None:
+            raise ValueError(
+                f"cannot resolve op={op!r} without shapes: give the plan "
+                "ShapeInfo (plan.with_shapes) or call the op with arrays"
+            )
+        cfg = p.flow
+        if op in ("prefill", "prefill_packed", "decode"):
+            cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
+        shard = None if op == "decode" else p.shard
+        return registry.resolve(cfg, shapes, p.platform, op=op,
+                                needs_grad=p.needs_grad, shard=shard)
+
+    # canonical ops ---------------------------------------------------------
+    def forward(self, q: Array, k: Array, v: Array) -> Array:
+        """Full-sequence Flow-Attention; ``plan.flow.causal`` picks the
+        variant.  q: (B,Hq,N,D); k: (B,Hkv,M,D); v: (B,Hkv,M,Dv)."""
+        be = self.backend("forward", self._shapes(q, k, v))
+        if self.plan.shard is not None:
+            return be.forward(q, k, v, self.plan.flow, shard=self.plan.shard)
+        return be.forward(q, k, v, self.plan.flow)
+
+    def prefill(self, q: Array, k: Array, v: Array,
+                *, lengths: Array | None = None):
+        """Consume a prompt; return (per-position outputs, decode FlowState).
+
+        ``lengths`` (B,) serves a right-padded batch of prompts in one call
+        (the ``prefill_packed`` op); the plan's ``packed`` flag documents
+        the intent but the array itself is a runtime argument.
+        """
+        cfg = dataclasses.replace(self.plan.flow, causal=True,
+                                  strict_causal=True)
+        op = "prefill" if lengths is None else "prefill_packed"
+        be = self.backend(op, self._shapes(q, k, v))
+        if self.plan.shard is not None:
+            return be.prefill(q, k, v, cfg, lengths=lengths,
+                              shard=self.plan.shard)
+        return be.prefill(q, k, v, cfg, lengths=lengths)
+
+    def decode_step(self, state, q: Array, k: Array, v: Array):
+        """Advance one token on the O(d^2) recurrent state."""
+        cfg = dataclasses.replace(self.plan.flow, causal=True,
+                                  strict_causal=True)
+        be = self.backend("decode", self._shapes(q, k, v))
+        return be.decode_step(state, q, k, v, cfg)
+
+
+def resolve_plan(plan: ExecutionPlan) -> BoundExecutor:
+    """Bind an ``ExecutionPlan`` to an executor (the plan-first ``resolve``).
+
+    Resolution itself is lazy-per-op (ops may bind different backends —
+    e.g. a pinned forward strategy never blocks decode); when the plan
+    carries shapes, the forward binding is validated eagerly so a plan
+    that can never execute fails here, with every backend's rejection
+    reason, instead of at first call.
+    """
+    ex = BoundExecutor(plan)
+    if plan.shapes is not None:
+        ex.backend("prefill_packed" if plan.packed else "forward")
+    return ex
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanExplanation:
+    """Human-readable resolution triage for one (plan, op)."""
+
+    plan: ExecutionPlan
+    op: str
+    platform: str
+    rows: tuple  # ((name, applicable, reason), ...)
+
+    def __str__(self) -> str:
+        p = self.plan
+        head = [f"{p.describe()} op={self.op!r} platform={self.platform!r}"]
+        if p.shard is not None:
+            head.append(f"  sharded over {p.shard.describe()}")
+        elif p.flow is not None:
+            head.append("  unsharded (no ShardSpec)")
+        body = [
+            f"  {'OK ' if ok else 'no '} {name}: {reason}"
+            for name, ok, reason in self.rows
+        ]
+        return "\n".join(head + body)
+
+
+def explain_plan(plan: ExecutionPlan, *, op: str = "forward") -> PlanExplanation:
+    """Per-backend verdicts for a plan — including ``shard_support``
+    reasons when the plan is sharded.  ``str()`` the result to print it."""
+    if plan.flow is None:
+        raise ValueError("ExecutionPlan.flow is unset — nothing to explain")
+    platform = plan.platform or jax.default_backend()
+    cfg = plan.flow
+    if op in ("prefill", "prefill_packed", "decode"):
+        cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
+    shapes = plan.shapes
+    if shapes is None:
+        raise ValueError(
+            "explain(plan) needs static shapes: plan.with_shapes(ShapeInfo(...))"
+        )
+    shard = None if op == "decode" else plan.shard
+    rows = registry.explain(cfg, shapes, platform, op=op,
+                            needs_grad=plan.needs_grad, shard=shard)
+    return PlanExplanation(plan=plan, op=op, platform=platform,
+                           rows=tuple(rows))

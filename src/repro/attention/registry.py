@@ -29,6 +29,18 @@ trainable by declaring it.  Failed resolution raises ``ResolutionError``
 carrying every candidate's rejection reason both in the message and as
 structured ``.rejections`` — CI and benchmark sweeps report *why* each
 backend was skipped instead of only the last reason.
+
+Shard capability works the same way: resolution is mesh-aware.  A
+``ShardSpec`` (mesh + sequence axis name) in the resolution request asks
+for context-parallel execution — the sequence axis sharded over devices —
+and backends self-report whether they carry the collective glue for it in
+``Backend.shardable`` / ``shard_support``.  Single-device strategies leave
+``shardable`` empty and are rejected for sharded plans with a "no
+collective glue" reason; the context-parallel backends (``cp_nc``,
+``cp_causal`` in ``attention/cp.py``) declare it and are in turn rejected
+for *unsharded* plans (``shard_only``).  ``ExecutionPlan`` /
+``resolve(plan)`` in ``attention/plan.py`` is the high-level door through
+which call sites hand all of this over at once.
 """
 from __future__ import annotations
 
@@ -59,6 +71,37 @@ class ShapeInfo:
                    hkv=k.shape[1], m=k.shape[2], dv=v.shape[3])
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How the sequence axis is sharded over a device mesh.
+
+    ``axis`` names the mesh axis the (B, H, N, D) sequence dimension is
+    split over; ``batch_axis`` optionally names the axis (or axis tuple)
+    the batch dimension is split over (replicated when ``None``).
+    ``inner`` selects the *shard-local* execution strategy a
+    context-parallel backend wraps in collective glue — ``"auto"`` resolves
+    it over the registry exactly like an unsharded plan would, so the
+    shard-local math can itself be a Pallas kernel on TPU.
+    """
+
+    axis: str = "model"
+    mesh: object | None = None  # jax.sharding.Mesh (hashable; jit-static)
+    batch_axis: object = None  # mesh axis name or tuple of names
+    inner: str = "auto"
+
+    @property
+    def axis_size(self) -> int | None:
+        if self.mesh is None:
+            return None
+        return int(self.mesh.shape[self.axis])
+
+    def describe(self) -> str:
+        size = self.axis_size
+        return (f"axis {self.axis!r}" + (f" ({size}-way)" if size else "")
+                + (f", batch over {self.batch_axis!r}" if self.batch_axis else "")
+                + (f", inner={self.inner!r}" if self.inner != "auto" else ""))
+
+
 class Backend:
     """One Flow-Attention execution strategy.
 
@@ -78,6 +121,14 @@ class Backend:
     #: Forward-only kernels leave this empty and are skipped by
     #: ``resolve(..., needs_grad=True)``.
     differentiable: frozenset = frozenset()
+    #: subset of ``provides`` that can run with the sequence axis sharded
+    #: over a mesh (``ShardSpec``) — the backend carries the collective
+    #: glue.  Single-device strategies leave this empty and are skipped
+    #: when resolution is asked for a sharded plan.
+    shardable: frozenset = frozenset()
+    #: True for backends that ONLY make sense sharded (context-parallel
+    #: glue); they are skipped for unsharded resolution requests.
+    shard_only: bool = False
 
     def supports(self, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
                  *, op: str = "forward", explicit: bool = False):
@@ -95,6 +146,26 @@ class Backend:
         return False, (
             f"no VJP rule for {op} (forward-only kernel; differentiable "
             f"ops: {sorted(self.differentiable) or 'none'})"
+        )
+
+    def shard_support(self, op: str = "forward", shard: "ShardSpec | None" = None,
+                      *, cfg=None, shapes: "ShapeInfo | None" = None,
+                      platform: str | None = None):
+        """(ok, reason) — whether ``op`` can run with the sequence axis
+        sharded per ``shard``.
+
+        The default answer is the declarative ``shardable`` set; backends
+        with collective glue override this to also validate the mesh axis,
+        divisibility, and their inner shard-local strategy.  ``cfg`` /
+        ``shapes`` / ``platform`` are the same values ``supports`` sees,
+        passed so refinements can be shape-aware.
+        """
+        if op in self.shardable:
+            return True, f"collective glue for sharded {op}"
+        return False, (
+            f"no collective glue for sharded {op} (single-device strategy"
+            + (f"; shardable ops: {sorted(self.shardable)}" if self.shardable
+               else "") + ")"
         )
 
     # canonical ops ---------------------------------------------------------
@@ -172,26 +243,47 @@ def _candidates(cfg: FlowConfig) -> tuple[list, bool]:
 
 
 def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
-           op: str, explicit: bool, needs_grad: bool):
+           op: str, explicit: bool, needs_grad: bool,
+           shard: ShardSpec | None = None):
     """(applicable, reason) for one backend — the single triage sequence
-    (provides -> gradient capability -> supports) shared by ``resolve`` and
-    ``explain`` so their answers can never drift apart."""
+    (provides -> gradient capability -> shard capability -> supports)
+    shared by ``resolve`` and ``explain`` so their answers can never drift
+    apart."""
     if op not in be.provides:
         return False, f"does not provide {op}"
     if needs_grad:
         ok, why = be.grad_support(op)
         if not ok:
             return False, why
-    return be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+    shard_why = None
+    if shard is not None:
+        ok, why = be.shard_support(op, shard, cfg=cfg, shapes=shapes,
+                                   platform=platform)
+        if not ok:
+            return False, why
+        shard_why = why
+    elif be.shard_only:
+        return False, ("context-parallel glue requires a sharded "
+                       "ExecutionPlan (no ShardSpec in this resolution)")
+    ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
+    if ok and shard_why:
+        why = f"{why}; {shard_why}"
+    return ok, why
 
 
 def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
-            *, op: str = "forward", needs_grad: bool = False) -> Backend:
+            *, op: str = "forward", needs_grad: bool = False,
+            shard: ShardSpec | None = None) -> Backend:
     """Deterministically pick the backend that will run ``op``.
 
     ``needs_grad=True`` additionally requires the backend to self-report
     gradient capability for ``op`` (``grad_support``) — training call sites
     use it to fail fast at build time instead of inside ``jax.grad``.
+
+    ``shard`` (a ``ShardSpec``) makes resolution mesh-aware: only backends
+    whose ``shard_support`` accepts the spec are candidates, so a sharded
+    plan lands on context-parallel collective glue (``cp_*``) and every
+    single-device strategy's rejection says "no collective glue".
 
     Raises ``ResolutionError`` with every candidate's rejection reason when
     nothing applies — the error is the documentation of why.
@@ -205,13 +297,15 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
     rejections = []
     for name in names:
         be = _REGISTRY[name]
-        ok, why = _judge(be, cfg, shapes, platform, op, explicit, needs_grad)
+        ok, why = _judge(be, cfg, shapes, platform, op, explicit, needs_grad,
+                         shard)
         if ok:
             return be
         rejections.append((name, why))
     raise ResolutionError(
         f"no applicable Flow-Attention backend for op={op!r}"
         + (" with gradients" if needs_grad else "")
+        + (f" sharded over {shard.describe()}" if shard is not None else "")
         + f" on platform={platform!r} with {shapes}:\n  "
         + "\n  ".join(f"{n}: {w}" for n, w in rejections),
         rejections,
@@ -219,13 +313,15 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
 
 
 def explain(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
-            *, op: str = "forward", needs_grad: bool = False) -> list:
+            *, op: str = "forward", needs_grad: bool = False,
+            shard: ShardSpec | None = None) -> list:
     """[(name, applicable, reason)] for every registered backend — debugging
-    aid and the data source for benchmark sweeps."""
+    aid and the data source for benchmark sweeps.  With ``shard`` the
+    reasons include each backend's ``shard_support`` verdict."""
     platform = platform or jax.default_backend()
     _, explicit = _candidates(cfg)
     return [
         (name, *_judge(_REGISTRY[name], cfg, shapes, platform, op, explicit,
-                       needs_grad))
+                       needs_grad, shard))
         for name in _ORDER
     ]

@@ -1,190 +1,55 @@
-"""Sequence-parallel (context-parallel) Flow-Attention via shard_map.
+"""DEPRECATED shim — context parallelism lives in the backend registry now.
 
-Beyond-paper distributed optimization (DESIGN.md §7.2): the only cross-token
-coupling in Flow-Attention is through *global sums* of d-vectors / (d x dv)
-matrices, so sharding the sequence axis over devices costs collectives of
-O(d^2) bytes — independent of sequence length.  Softmax attention in the same
-regime needs the full O(n*d) KV exchange (ring attention).
+The shard-local math that used to be hand-built here is the ``cp_nc`` /
+``cp_causal`` backends in ``repro/attention/cp.py`` (shard-local inner
+strategy + collective glue: psums for non-causal, the all-gather +
+exclusive-prefix scan for causal), resolved like every other execution
+strategy.  Build a sharded ``ExecutionPlan`` instead:
 
-Functions here are written to run *inside* ``jax.shard_map`` with the
-sequence axis sharded over ``axis_name``; ``make_context_parallel`` builds
-the shard_map wrapper.  Non-causal uses ``psum``; causal uses an
-``all_gather`` of per-device partial sums followed by a local exclusive
-prefix (a distributed Blelloch scan over tiny tensors).
+    from repro import attention
+
+    plan = attention.ExecutionPlan(
+        flow=cfg,
+        shard=attention.ShardSpec(axis="model", mesh=mesh),
+    )
+    out = attention.resolve(plan).forward(q, k, v)
+
+``make_context_parallel`` is kept for old callers: it builds exactly that
+plan and warns once.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.core.flow_attention import FlowConfig
 
-from repro.core.flow_attention import FlowConfig, _group, _ungroup, phi_map
-
-# jax moved shard_map out of experimental in 0.5; support both
-_shard_map = getattr(jax, "shard_map", None)
-if _shard_map is None:  # pragma: no cover - version-dependent
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-Array = jax.Array
+_WARNED = False
 
 
-# ---------------------------------------------------------------------------
-# Non-causal: pure psum of flow sums
-# ---------------------------------------------------------------------------
-def flow_attention_nc_cp(
-    q: Array, k: Array, v: Array, cfg: FlowConfig, axis_name: str
-) -> Array:
-    """Sequence-parallel non-causal Flow-Attention (call inside shard_map).
-
-    q: (B,Hq,Nl,D); k: (B,Hkv,Ml,D); v: (B,Hkv,Ml,Dv) — local shards.
-    Collective volume: 5 psums of (B,Hkv,D) + 1 psum of (B,Hkv,D,Dv) + scalars.
-    """
-    out_dtype = q.dtype
-    eps = cfg.eps
-    b, hq, nl, d = q.shape
-    hkv, ml = k.shape[1], k.shape[2]
-    psize = jax.lax.psum(1, axis_name)
-    n_tot = nl * psize
-    m_tot = ml * psize
-
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
-    vf = v.astype(jnp.float32)
-    qg = _group(phi_q, hkv)
-
-    k_sum = jax.lax.psum(phi_k.sum(axis=2), axis_name)  # (B,Hkv,D)
-    q_sum = jax.lax.psum(qg.sum(axis=(2, 3)), axis_name)
-    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", qg + eps, k_sum + eps)
-    src_out = 1.0 / jnp.einsum("bhmd,bhd->bhm", phi_k + eps, q_sum + eps)
-
-    ko_sum = jax.lax.psum((phi_k * src_out[..., None]).sum(axis=2), axis_name)
-    cons_sink = jnp.einsum("bhgnd,bhd->bhgn", qg + eps, ko_sum + eps)
-    qi_sum = jax.lax.psum((qg * sink_in[..., None]).sum(axis=(2, 3)), axis_name)
-    cons_src = jnp.clip(
-        jnp.einsum("bhmd,bhd->bhm", phi_k + eps, qi_sum + eps), -1.0, 1.0
-    )
-
-    n_sinks = qg.shape[2] * n_tot
-    if cfg.use_competition:
-        # clamp bounds exp() — distributed softmax needs no running max
-        e = jnp.exp(cons_src)
-        z = jax.lax.psum(e.sum(axis=-1), axis_name)  # (B,Hkv)
-        v_hat = vf * (e / z[..., None] * float(m_tot))[..., None]
-    else:
-        v_hat = vf
-    if cfg.use_allocation:
-        alloc = jax.nn.sigmoid(cons_sink * (float(n_sinks) / float(m_tot)))
-    else:
-        alloc = jnp.ones_like(cons_sink)
-
-    kv = jax.lax.psum(
-        jnp.einsum("bhmd,bhme->bhde", phi_k, v_hat), axis_name
-    )  # (B,Hkv,D,Dv) — THE collective: O(d^2), independent of sequence length
-    agg = jnp.einsum("bhgnd,bhde->bhgne", qg * sink_in[..., None], kv)
-    return _ungroup(agg * alloc[..., None]).astype(out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# Causal: all_gather of per-device partials + local exclusive prefix
-# ---------------------------------------------------------------------------
-def _prefix(partials: Array, idx: Array) -> Array:
-    """Exclusive prefix over the leading (device) axis, select own entry."""
-    csum = jnp.cumsum(partials, axis=0)
-    excl = csum - partials  # exclusive prefix per device
-    return excl[idx]
-
-
-def flow_attention_causal_cp(
-    q: Array, k: Array, v: Array, cfg: FlowConfig, axis_name: str
-) -> Array:
-    """Sequence-parallel strictly-causal Flow-Attention (inside shard_map).
-
-    Device p holds positions [p*Nl, (p+1)*Nl).  Cross-device coupling is the
-    exclusive prefix of six small per-device partial sums; collective volume
-    O(P * d^2) — independent of sequence length.
-    """
-    assert cfg.strict_causal, "context-parallel causal requires strict_causal"
-    out_dtype = q.dtype
-    eps = cfg.eps
-    b, hq, nl, d = q.shape
-    hkv = k.shape[1]
-    idx = jax.lax.axis_index(axis_name)
-
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
-    vf = v.astype(jnp.float32)
-    qg = _group(phi_q, hkv)
-    g = qg.shape[2]
-
-    # global positions of the local shard
-    pos = (idx * nl + jnp.arange(1, nl + 1)).astype(jnp.float32)
-    normal_q = pos * g
-    normal_k = pos
-
-    def dist_cumsum(x: Array) -> Array:
-        """Inclusive cumsum along axis=2 of a sequence-sharded tensor."""
-        local = jnp.cumsum(x, axis=2)
-        part = jax.lax.all_gather(x.sum(axis=2), axis_name)  # (P, B, H, ...)
-        return local + _prefix(part, idx)[:, :, None]
-
-    k_csum = dist_cumsum(phi_k)
-    q_csum = dist_cumsum(qg.sum(axis=2))
-    sink_in = normal_k / jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, k_csum + eps)
-    src_out = normal_q / jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, q_csum + eps)
-
-    ko_csum = dist_cumsum(phi_k * src_out[..., None])
-    cons_sink = jnp.einsum("bhgnd,bhnd->bhgn", qg + eps, ko_csum + eps) / normal_q
-    qi_csum = dist_cumsum((qg * sink_in[..., None]).sum(axis=2))
-    cons_src = jnp.clip(
-        jnp.einsum("bhnd,bhnd->bhn", phi_k + eps, qi_csum + eps) / normal_k,
-        -1.0,
-        1.0,
-    )
-
-    alloc = jax.nn.sigmoid(cons_sink) if cfg.use_allocation else jnp.ones_like(cons_sink)
-    e = jnp.exp(cons_src)
-    z_local = jnp.cumsum(e, axis=-1)
-    z_part = jax.lax.all_gather(e.sum(axis=-1), axis_name)
-    z = z_local + _prefix(z_part, idx)[..., None]  # (B,Hkv,Nl)
-
-    v_w = vf * e[..., None]
-    # local causal dot + carried inter-device state
-    from repro.attention import causal_dot_grouped
-
-    q_in = qg * sink_in[..., None]
-    local = causal_dot_grouped(q_in, phi_k, v_w, cfg.chunk_size)
-    s_part = jax.lax.all_gather(
-        jnp.einsum("bhnd,bhne->bhde", phi_k, v_w), axis_name
-    )  # (P,B,Hkv,D,Dv)
-    s_prev = _prefix(s_part, idx)
-    inter = jnp.einsum("bhgnd,bhde->bhgne", q_in, s_prev)
-    agg = local + inter
-
-    out = agg * (normal_k / z)[:, :, None, :, None] * alloc[..., None]
-    return _ungroup(out).astype(out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# shard_map wrapper
-# ---------------------------------------------------------------------------
 def make_context_parallel(mesh, cfg: FlowConfig, *, seq_axis: str = "model"):
-    """Build a jit-able sequence-parallel flow attention over ``mesh``.
+    """Deprecated: build a jit-able sequence-parallel flow attention.
 
-    Inputs/outputs are (B, H, N, D) with N sharded over ``seq_axis`` and H
-    replicated along it (heads usually sharded over a different axis or
-    folded into batch)."""
-    fn = flow_attention_causal_cp if cfg.causal else flow_attention_nc_cp
-    spec = P(None, None, seq_axis, None)
+    Delegates to the registry's context-parallel backends through a sharded
+    ``ExecutionPlan``; inputs/outputs are (B, H, N, D) with N sharded over
+    ``seq_axis`` and H replicated along it.
+    """
+    global _WARNED
+    if not _WARNED:
+        _WARNED = True
+        warnings.warn(
+            "make_context_parallel is deprecated: build a sharded "
+            "attention.ExecutionPlan(flow=cfg, shard=ShardSpec(axis=..., "
+            "mesh=...)) and call attention.resolve(plan).forward(...)",
+            DeprecationWarning, stacklevel=2,
+        )
+    from repro import attention
 
-    @functools.partial(
-        _shard_map,
-        mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=spec,
+    plan = attention.ExecutionPlan(
+        flow=cfg, shard=attention.ShardSpec(axis=seq_axis, mesh=mesh)
     )
+    ex = attention.resolve(plan)
+
     def wrapped(q, k, v):
-        return fn(q, k, v, cfg, seq_axis)
+        return ex.forward(q, k, v)
 
     return wrapped

@@ -14,4 +14,4 @@ def prefill(q, k, v, cfg: FlowConfig):
     """Consume a prompt; return per-position outputs and the decode state."""
     from repro import attention
 
-    return attention.prefill(q, k, v, cfg)
+    return attention.resolve(attention.ExecutionPlan(flow=cfg)).prefill(q, k, v)

@@ -116,7 +116,7 @@ def flow_attention_nc(
 
     if cfg.causal:
         cfg = dataclasses.replace(cfg, causal=False)
-    return attention.forward(q, k, v, cfg)
+    return attention.resolve(attention.ExecutionPlan(flow=cfg)).forward(q, k, v)
 
 
 def flow_attention_causal(
@@ -138,15 +138,16 @@ def flow_attention_causal(
 
     if not cfg.causal:
         cfg = dataclasses.replace(cfg, causal=True)
+    ex = attention.resolve(attention.ExecutionPlan(flow=cfg))
     if return_state:
         assert cfg.strict_causal and cfg.use_competition, (
             "recurrent decode state requires strict_causal competition"
         )
-        return attention.prefill(q, k, v, cfg)
-    return attention.forward(q, k, v, cfg)
+        return ex.prefill(q, k, v)
+    return ex.forward(q, k, v)
 
 
 def flow_attention(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
     from repro import attention
 
-    return attention.forward(q, k, v, cfg)
+    return attention.resolve(attention.ExecutionPlan(flow=cfg)).forward(q, k, v)

@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.layers.attention import plan_of
 from repro.models import lm
 from repro.serving.engine import Engine, PagedSpec, Request
 
@@ -51,8 +52,12 @@ def main():
     params = lm.init(jax.random.PRNGKey(0), cfg)
     paged = (PagedSpec(page_size=args.page_size, num_pages=args.num_pages)
              if args.paged else None)
+    # one ExecutionPlan for the whole serving lifetime: the paged-cache
+    # option and packed admission ride it instead of per-call kwargs
+    plan = plan_of(cfg, paged=paged, packed=True)
     engine = Engine(params, cfg, slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8, paged=paged)
+                    max_len=args.prompt_len + args.max_new + 8, plan=plan)
+    print(f"[serve] attention plan: {engine.worker.plan.describe()}")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

@@ -1,9 +1,10 @@
 """Step builders: distributed train_step / serve_step per architecture.
 
 These produce the exact jitted computations that the dry-run lowers and
-the real launchers (train.py / serve.py) execute.  Flow-Attention execution
-inside every step is resolved by the ``repro/attention`` backend registry
-(from ``cfg.attention.backend``) at trace time — step builders only decide
+the real launchers (train.py / serve.py) execute.  Each builder constructs
+ONE attention ``ExecutionPlan`` at build time (gradient needs for the train
+step, the mesh/axis ``ShardSpec`` for sequence-parallel prefill) and the
+``repro/attention`` registry resolves it — step builders decide
 distribution (sharding, microbatching, sequence parallelism), never which
 kernel runs the attention math.
 """
@@ -28,25 +29,24 @@ from repro.training.train_state import TrainConfig, TrainState, make_train_step
 from repro.training import optimizer as opt_lib
 
 
-def model_loss_fn(cfg: ModelConfig):
+def _dp_spec_axis(dp):
+    """PartitionSpec entry for the data-parallel axes of a mesh: an axis
+    tuple, a single axis name, or None (replicated) when the mesh has no
+    dp axes at all."""
+    return tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def model_loss_fn(cfg: ModelConfig, xplan=None):
     from repro.models import encdec, lm
 
     if cfg.family == "encdec":
         return functools.partial(encdec.loss_fn, cfg=cfg)
-    return functools.partial(lm.loss_fn, cfg=cfg)
+    return functools.partial(lm.loss_fn, cfg=cfg, plan=xplan)
 
 
-def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec):
-    """Fail fast if the configured flow backend cannot provide gradients.
-
-    Resolves the training forward with ``needs_grad=True`` at build time so
-    a pinned forward-only backend raises here — with every backend's own
-    rejection reason — instead of deep inside ``jax.grad`` tracing.
-    """
-    if cfg.attention.kind != "flow":
-        return None
+def training_shapes(cfg: ModelConfig, shape: ShapeSpec):
+    """Static attention shapes of one training step (for plan resolution)."""
     from repro import attention
-    from repro.layers.attention import flow_cfg_of
 
     if cfg.mla is not None:
         d = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
@@ -54,12 +54,31 @@ def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec):
     else:
         d = dv = cfg.dim_head
         hq, hkv = cfg.n_heads, cfg.kv_heads
-    shapes = attention.ShapeInfo(b=max(1, shape.global_batch), hq=hq,
-                                 hkv=hkv, n=shape.seq_len, m=shape.seq_len,
-                                 d=d, dv=dv)
-    be = attention.resolve_for_training(flow_cfg_of(cfg, causal=True), shapes)
+    return attention.ShapeInfo(b=max(1, shape.global_batch), hq=hq,
+                               hkv=hkv, n=shape.seq_len, m=shape.seq_len,
+                               d=d, dv=dv)
+
+
+def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec, xplan=None):
+    """Fail fast if the configured flow backend cannot provide gradients.
+
+    Resolves the training plan's forward with ``needs_grad=True`` at build
+    time so a pinned forward-only backend raises here — with every
+    backend's own rejection reason — instead of deep inside ``jax.grad``
+    tracing.
+    """
+    if cfg.attention.kind != "flow":
+        return None
+    from repro import attention
+    from repro.layers.attention import flow_cfg_of, plan_of
+
+    xplan = xplan if xplan is not None else plan_of(cfg, needs_grad=True)
+    shapes = training_shapes(cfg, shape)
+    be = attention.resolve_for_training(
+        xplan.with_shapes(shapes).with_flow(flow_cfg_of(cfg, causal=True)))
     if cfg.family == "encdec":  # encoder side trains non-causally too
-        attention.resolve_for_training(flow_cfg_of(cfg, causal=False), shapes)
+        attention.resolve_for_training(
+            xplan.with_shapes(shapes).with_flow(flow_cfg_of(cfg, causal=False)))
     return be
 
 
@@ -110,8 +129,13 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
     from repro.launch.specs import params_shape, train_inputs
 
+    from repro.layers.attention import plan_of
+
     plan = plan or RunPlan.choose(cfg, shape, mesh)
-    check_flow_trainable(cfg, shape)  # forward-only backend pins fail here
+    # ONE attention ExecutionPlan for the whole training step, built here
+    # at construction time; forward-only backend pins fail fast below
+    xplan = plan_of(cfg, needs_grad=True)
+    check_flow_trainable(cfg, shape, xplan)
     tcfg = TrainConfig(microbatch=plan.microbatch, optimizer=plan.optimizer,
                        fused_value_grad=plan.fused_vg)
     if train_overrides:
@@ -121,7 +145,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     zspecs = tree_zero1_specs(pshape, mesh)
     compute_specs = zspecs if plan.param_mode == "fsdp" else pspecs
 
-    loss = model_loss_fn(cfg)
+    loss = model_loss_fn(cfg, xplan)
 
     def constrained_loss(params, batch):
         params = jax.lax.with_sharding_constraint(
@@ -137,7 +161,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
         raw_step = step_fn
 
         def step_fn(state, batch):  # context active at trace time
-            with activation_sharding(P(dp if len(dp) > 1 else dp[0], None, None), mesh):
+            with activation_sharding(P(_dp_spec_axis(dp), None, None), mesh):
                 return raw_step(state, batch)
 
     # state shapes/specs
@@ -184,18 +208,45 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     from repro.launch.specs import params_shape, prefill_inputs
     from repro.models import encdec, lm
 
+    from repro import attention
+    from repro.layers.attention import plan_of
+
     plan = plan or RunPlan.choose(cfg, shape, mesh)
     pshape = params_shape(cfg)
     pspecs = tree_param_specs(pshape, mesh)
     if plan.param_mode == "fsdp":
         pspecs = tree_zero1_specs(pshape, mesh)
 
+    # seq-parallel flow prefill resolves through the registry like every
+    # other strategy: ONE sharded ExecutionPlan built here binds the
+    # context-parallel backends (cp_causal + collective glue) inside the
+    # jitted step.  Shapes the glue cannot shard (indivisible N) fall back
+    # to the unsharded plan — GSPMD still seq-shards the XLA cumsums.
+    xplan = None
+    if seq_shard and cfg.attention.kind == "flow":
+        dp = dp_axes(mesh)
+        shard = attention.ShardSpec(axis="model", mesh=mesh,
+                                    batch_axis=_dp_spec_axis(dp))
+        cand = plan_of(cfg, shard=shard)
+        try:
+            # validate the op this step actually runs (prefill forces the
+            # strict-causal serving competition, so paper-faithful
+            # strict_causal=False configs still bind the glue)
+            attention.BoundExecutor(
+                cand.with_shapes(training_shapes(cfg, shape))
+            ).backend("prefill")
+            xplan = cand
+        except attention.ResolutionError as err:
+            print(f"[steps] seq-shard plan fell back to GSPMD: "
+                  f"{err.rejections[-1] if err.rejections else err}")
+
     if cfg.family == "encdec":
         def base_prefill(params, batch):
             return encdec.encode(params, batch["frames"], cfg)
     else:
         def base_prefill(params, batch):
-            return lm.prefill(params, batch["inputs"], cfg, shape.seq_len)
+            return lm.prefill(params, batch["inputs"], cfg, shape.seq_len,
+                              plan=xplan)
 
     if plan.act_shard or seq_shard:
         from repro.distribution.act_sharding import activation_sharding
@@ -205,7 +256,7 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
         def prefill_fn(params, batch):
             with activation_sharding(
-                P(dp if len(dp) > 1 else dp[0], saxis, None), mesh
+                P(_dp_spec_axis(dp), saxis, None), mesh
             ):
                 return base_prefill(params, batch)
     else:
@@ -233,9 +284,12 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     distributed step returns sampled tokens instead of logits — the same
     zero-per-slot-sync contract as ``repro/serving/worker.py``."""
     from repro.launch.specs import decode_inputs, params_shape
+    from repro.layers.attention import plan_of
     from repro.models import encdec, lm
 
     plan = plan or RunPlan.choose(cfg, shape, mesh)
+    xplan = plan_of(cfg)  # the decode step's attention plan (no shard:
+    # a decode step has no sequence axis; the state pool is batch-led)
     pshape = params_shape(cfg)
     pspecs = tree_param_specs(pshape, mesh)
     if plan.param_mode == "fsdp":
@@ -255,14 +309,15 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
         def decode_fn(params, batch):
             logits, caches = lm.decode(params, batch["token"],
-                                       batch["caches"], cfg, batch["pos"])
+                                       batch["caches"], cfg, batch["pos"],
+                                       plan=xplan)
             tok = sample_tokens(batch["key"], logits, batch["temps"],
                                 batch["live"])
             return tok, caches
     else:
         def decode_fn(params, batch):
             return lm.decode(params, batch["token"], batch["caches"], cfg,
-                             batch["pos"])
+                             batch["pos"], plan=xplan)
 
     binputs = dict(decode_inputs(cfg, shape))
     if fused_sampling:

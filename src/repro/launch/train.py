@@ -23,7 +23,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, ShapeSpec
 from repro.configs import get_config, get_smoke_config
 from repro.data.loader import lm_loader
-from repro.launch.steps import RunPlan, build_train_step
+from repro.launch.steps import RunPlan, build_train_step, training_shapes
 from repro.models import lm
 from repro.runtime.elastic import StepMonitor
 from repro.training.train_state import TrainState
@@ -54,6 +54,14 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
     )
     print(f"[train] {cfg.name}: {pretty_count(tree_size(params))} params, "
           f"plan={plan}")
+    if cfg.attention.kind == "flow":
+        from repro import attention
+        from repro.layers.attention import plan_of
+
+        xplan = plan_of(cfg, needs_grad=True).with_shapes(
+            training_shapes(cfg, shape))
+        be = attention.resolve_for_training(xplan)
+        print(f"[train] attention {xplan.describe()} -> {be.name}")
 
     start_step = 0
     mgr = None

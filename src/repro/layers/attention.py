@@ -13,8 +13,10 @@ Caches:
                    constant in context length: why `long_500k` decode is cheap.
 
 Flow execution (which kernel/scan realizes the math) is resolved by the
-``repro/attention`` backend registry from ``cfg.attention.backend``; this
-layer never names an execution path.
+``repro/attention`` backend registry from one ``ExecutionPlan`` built at
+module-construction time (``plan_of``) — mesh/axis sharding, packed
+admission and the paged-cache option ride the plan instead of per-call
+kwargs; this layer never names an execution path.
   * softmax      — dense KV cache (B, Hkv, L, D) written at position t.
   * local        — ring-buffer KV cache of window size W.
   * MLA+softmax  — compressed latent cache (B, L, kv_lora+rope) with the
@@ -22,13 +24,14 @@ layer never names an execution path.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import attention as flow_backend
-from repro.attention import init_state
+from repro.attention import BoundExecutor, ExecutionPlan, ShardSpec, init_state
 from repro.config import ModelConfig
 from repro.core.flow_attention import FlowConfig, phi_map
 from repro.layers.linear import dense, dense_init
@@ -69,6 +72,33 @@ def flow_cfg_of(cfg: ModelConfig, causal: bool) -> FlowConfig:
         gqa_mode=a.gqa_mode,
         backend=a.backend,
     )
+
+
+def plan_of(cfg: ModelConfig, *, causal: bool = True,
+            shard: ShardSpec | None = None, paged=None, packed: bool = False,
+            needs_grad: bool = False, platform: str | None = None
+            ) -> ExecutionPlan:
+    """Build the model-level ``ExecutionPlan`` ONCE (engine/step
+    construction time) instead of re-threading backend pins / ``paged=`` /
+    mesh axes as per-call kwargs.  ``flow`` is derived from
+    ``cfg.attention``; layers re-derive it per block anyway (hybrid stacks
+    flip ``causal``/kind per slot), so the plan's job is carrying the
+    execution context: shard placement, packed admission, paged caches,
+    gradient needs."""
+    return ExecutionPlan(flow=flow_cfg_of(cfg, causal), shard=shard,
+                         paged=paged, packed=packed, needs_grad=needs_grad,
+                         platform=platform)
+
+
+def _flow_executor(cfg: ModelConfig, causal: bool,
+                   plan: ExecutionPlan | None) -> BoundExecutor:
+    """Executor for one attention block: the block's FlowConfig (from
+    ``cfg.attention`` + this call's causality) under the plan's execution
+    context.  With no plan this is exactly the legacy per-call behavior."""
+    fc = flow_cfg_of(cfg, causal)
+    if plan is None:
+        return BoundExecutor(ExecutionPlan(flow=fc))
+    return BoundExecutor(dataclasses.replace(plan, flow=fc))
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +298,7 @@ def attention(
     causal: bool,
     positions: Array | None = None,
     kv_input: Array | None = None,  # cross-attention memory (enc-dec)
+    plan: ExecutionPlan | None = None,
 ) -> Array:
     """Full-sequence attention (train / encode).  x: (B, N, d_model)."""
     kind = cfg.attention.kind
@@ -285,7 +316,7 @@ def attention(
         q, k, v = _project_qkv_mla(params, x, cfg, positions)
 
     if kind == "flow":
-        out = flow_backend.forward(q, k, v, flow_cfg_of(cfg, causal))
+        out = _flow_executor(cfg, causal, plan).forward(q, k, v)
     elif kind == "softmax":
         out = _softmax_attn(q, k, v, causal=causal, softcap=cfg.attention.softcap)
     elif kind == "local":
@@ -304,9 +335,11 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     """Decode-cache for one layer.
 
     ``paged`` switches standard softmax KV layers to a ``PagedKVCache``
-    pool (see ``repro/serving/paged.py``); flow/linear states and the
-    bounded local ring buffer are unaffected, and MLA keeps its compressed
-    dense cache (already ~an order of magnitude smaller than raw KV).
+    pool (see ``repro/serving/paged.py``); model-level callers carry the
+    spec on their ``ExecutionPlan`` and ``lm.init_caches`` unfolds it.
+    Flow/linear states and the bounded local ring buffer are unaffected,
+    and MLA keeps its compressed dense cache (already ~an order of
+    magnitude smaller than raw KV).
     """
     kind = cfg.attention.kind
     hd, nkv = cfg.dim_head, cfg.kv_heads
@@ -352,6 +385,7 @@ def attention_decode(
     *,
     positions: Array | None = None,
     page_table: Array | None = None,
+    plan: ExecutionPlan | None = None,
 ):
     """One-token decode.  x: (B, 1, d_model) -> (out, new_cache).
 
@@ -369,8 +403,8 @@ def attention_decode(
         return _paged_decode(params, q, k, v, cache, cfg, page_table)
 
     if kind == "flow":
-        fc = flow_cfg_of(cfg, causal=True)
-        new_state, out = flow_backend.decode_step(cache, q, k, v, fc)
+        ex = _flow_executor(cfg, True, plan)
+        new_state, out = ex.decode_step(cache, q, k, v)
         return dense(params["wo"], _merge_heads(out)), new_state
     if kind == "linear":
         pq = phi_map(q.astype(jnp.float32), "elu1")[:, :, 0]
@@ -415,8 +449,12 @@ def _paged_decode(params, q, k, v, cache: PagedKVCache, cfg: ModelConfig,
     page = cache.k.shape[2]
     max_pages = page_table.shape[1]
     rows = jnp.arange(b)
-    pid = page_table[rows, jnp.minimum(t // page, max_pages - 1)]  # (B,)
-    off = t % page
+    # clamp the POSITION (not just the page index) so writes past the slot
+    # capacity land on the last in-page offset — mirroring the dense
+    # end-of-cache clamp instead of wrapping onto attended context
+    tc = jnp.minimum(t, max_pages * page - 1)  # (B,)
+    pid = page_table[rows, tc // page]  # (B,)
+    off = tc % page
     # sentinel pids are out of range: the scatter drops them (dead slots)
     kc = cache.k.at[pid, :, off].set(k[:, :, 0].astype(cache.k.dtype))
     vc = cache.v.at[pid, :, off].set(v[:, :, 0].astype(cache.v.dtype))
@@ -486,6 +524,7 @@ def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions
 def attention_prefill(
     params, x: Array, cfg: ModelConfig, max_len: int, *,
     positions: Array | None = None, lengths: Array | None = None,
+    plan: ExecutionPlan | None = None,
 ):
     """Prompt prefill returning (out, cache) for subsequent decode.
 
@@ -499,8 +538,8 @@ def attention_prefill(
     b, n, _ = x.shape
     q, k, v = _project_qkv(params, x, cfg, positions)
     if kind == "flow":
-        fc = flow_cfg_of(cfg, causal=True)
-        out, state = flow_backend.prefill(q, k, v, fc, lengths=lengths)
+        ex = _flow_executor(cfg, True, plan)
+        out, state = ex.prefill(q, k, v, lengths=lengths)
         return dense(params["wo"], _merge_heads(out)), state
     pos0 = (jnp.full((b,), n, jnp.int32) if lengths is None
             else lengths.astype(jnp.int32))

@@ -72,10 +72,11 @@ def _block_init(key, kind: str, cfg: ModelConfig) -> dict:
     return p
 
 
-def _mixer(params, x, kind: str, cfg: ModelConfig, positions):
+def _mixer(params, x, kind: str, cfg: ModelConfig, positions, plan=None):
     if kind in ("attn", "local"):
         sub = dataclass_replace_attn(cfg, kind)
-        return attention(params["attn"], x, sub, causal=True, positions=positions)
+        return attention(params["attn"], x, sub, causal=True,
+                         positions=positions, plan=plan)
     if kind == "rglru":
         return rglru_block(params["rglru"], x, cfg)
     if kind == "ssd":
@@ -101,11 +102,11 @@ def dataclass_replace_attn(cfg: ModelConfig, kind: str) -> ModelConfig:
     return cfg
 
 
-def _block_apply(params, x, kind: str, cfg: ModelConfig, positions):
+def _block_apply(params, x, kind: str, cfg: ModelConfig, positions, plan=None):
     from repro.distribution.act_sharding import constrain_residual
 
     h = apply_norm(params["norm1"], x, cfg.norm)
-    x = constrain_residual(x + _mixer(params, h, kind, cfg, positions))
+    x = constrain_residual(x + _mixer(params, h, kind, cfg, positions, plan))
     aux = jnp.zeros((), jnp.float32)
     if "ffn" in params:
         x = x + ffn(params["ffn"], apply_norm(params["norm2"], x, cfg.norm), cfg.act)
@@ -164,9 +165,13 @@ def forward(
     *,
     positions: Array | None = None,
     dtype=jnp.bfloat16,
+    plan=None,
 ):
     """inputs: int tokens (B, N) or stub embeddings (B, N, d).
 
+    ``plan`` (an ``attention.ExecutionPlan``) carries the execution context
+    built once at step construction — mesh/axis sharding for context
+    parallelism, gradient needs — instead of per-call kwargs.
     Returns (logits (B, N, vocab) fp32, aux_loss scalar)."""
     b = inputs.shape[0]
     n = inputs.shape[1]
@@ -186,7 +191,8 @@ def forward(
         def period_body(x, layer_params):
             aux = jnp.zeros((), jnp.float32)
             for j, kind in enumerate(cfg.pattern):
-                x, a = _block_apply(layer_params[j], x, kind, cfg, positions)
+                x, a = _block_apply(layer_params[j], x, kind, cfg, positions,
+                                    plan)
                 aux = aux + a
             return x, aux
 
@@ -203,13 +209,13 @@ def forward(
         )
         for i, bp in enumerate(params["tail"]):
             kind = cfg.block_kind(n_rep * period + i)
-            x, a = _block_apply(bp, x, kind, cfg, positions)
+            x, a = _block_apply(bp, x, kind, cfg, positions, plan)
             aux_total = aux_total + a
     else:
         for i, bp in enumerate(params["blocks"]):
             kind = cfg.block_kind(i)
             f = functools.partial(_block_apply, kind=kind, cfg=cfg,
-                                  positions=positions)
+                                  positions=positions, plan=plan)
             if cfg.remat:
                 f = jax.checkpoint(f)
             x, a = f(bp, x)
@@ -221,10 +227,11 @@ def forward(
     return logits, aux_total
 
 
-def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            plan=None):
     """batch: {"inputs": tokens/embeds, "targets": (B,N) int, "mask": (B,N)}."""
     logits, aux = forward(params, batch["inputs"], cfg, dtype=dtype,
-                          positions=batch.get("positions"))
+                          positions=batch.get("positions"), plan=plan)
     targets = batch["targets"]
     mask = batch.get("mask")
     if mask is None:
@@ -242,11 +249,15 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode with per-layer caches
 # ---------------------------------------------------------------------------
-def init_caches(cfg: ModelConfig, batch: int, max_len: int, *, paged=None):
-    """Per-layer decode caches.  ``paged`` (a ``serving.paged.PagedSpec``)
-    switches standard softmax KV layers to the shared page pool; all other
-    cache kinds are unaffected (flow/linear/rglru/ssd states are already
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *, paged=None,
+                plan=None):
+    """Per-layer decode caches.  ``paged`` (a ``serving.paged.PagedSpec``,
+    or carried by ``plan.paged`` — the plan-first spelling) switches
+    standard softmax KV layers to the shared page pool; all other cache
+    kinds are unaffected (flow/linear/rglru/ssd states are already
     constant-size, local rings already bounded)."""
+    if plan is not None and plan.paged is not None:
+        paged = plan.paged
     caches = []
     for i in range(cfg.n_layers):
         kind = cfg.block_kind(i)
@@ -273,7 +284,7 @@ def _blocks_list(params, cfg: ModelConfig):
 
 
 def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
-            *, dtype=jnp.bfloat16, lengths: Array | None = None):
+            *, dtype=jnp.bfloat16, lengths: Array | None = None, plan=None):
     """Consume a prompt; return (last-token logits, caches).
 
     ``lengths`` (B,) int packs several right-padded prompts into ONE call
@@ -293,7 +304,8 @@ def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
         if kind in ("attn", "local"):
             sub = dataclass_replace_attn(cfg, kind)
             y, cache = attention_prefill(bp["attn"], h, sub, max_len,
-                                         positions=positions, lengths=lengths)
+                                         positions=positions, lengths=lengths,
+                                         plan=plan)
         elif kind == "rglru":
             if lengths is not None:
                 raise NotImplementedError(
@@ -326,14 +338,15 @@ def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
 
 
 def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
-           *, dtype=jnp.bfloat16, page_table: Array | None = None):
+           *, dtype=jnp.bfloat16, page_table: Array | None = None, plan=None):
     """One decode step.  token: (B, 1) int or (B, 1, d) stub embedding.
 
     pos: () or (B,) int32 — absolute position(s) of this token (per-slot
     under continuous batching).
     page_table: (B, pages_per_slot) int32 slot->page mapping, required when
-    the caches are paged (``init_caches(..., paged=...)``); one table
-    serves every layer.
+    the caches are paged (``init_caches`` with a paged plan); one table
+    serves every layer (the table is runtime data and stays a call arg —
+    the *spec* rides ``plan.paged``).
     Returns (logits (B,1,vocab), new_caches)."""
     b = token.shape[0]
     x = _embed_inputs(params, token, cfg, dtype)
@@ -352,7 +365,7 @@ def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
             sub = dataclass_replace_attn(cfg, kind)
             y, cache = attention_decode(bp["attn"], h, caches[i], sub,
                                         positions=positions,
-                                        page_table=page_table)
+                                        page_table=page_table, plan=plan)
         elif kind == "rglru":
             y, cache = rglru_decode(bp["rglru"], h, caches[i], cfg)
         else:

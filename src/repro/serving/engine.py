@@ -49,7 +49,10 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 4096, seed: int = 0,
-                 paged: PagedSpec | bool | None = None):
+                 paged: PagedSpec | bool | None = None, plan=None):
+        """``plan`` (an ``attention.ExecutionPlan``) carries the serving
+        execution context built once by the caller; ``paged=`` remains as
+        facade sugar and is folded into the worker's plan."""
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -57,7 +60,7 @@ class Engine:
             paged = PagedSpec()
         self.scheduler = Scheduler(slots)
         self.worker = Worker(params, cfg, slots=slots, max_len=max_len,
-                             paged=paged or None, seed=seed)
+                             paged=paged or None, seed=seed, plan=plan)
 
     # -- facade conveniences (examples/tests poke at these) -------------
     @property

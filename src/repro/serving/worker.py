@@ -27,9 +27,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
+from repro.attention.plan import ExecutionPlan
 from repro.attention.recurrent import FlowState
 from repro.config import ModelConfig
-from repro.layers.attention import KVCache, LinearState, MLACache
+from repro.layers.attention import KVCache, LinearState, MLACache, plan_of
 from repro.models import lm
 from repro.models.lm import dataclass_replace_attn
 from repro.serving.paged import (
@@ -155,22 +158,31 @@ class Worker:
     touches the device is one jitted call."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
-                 paged: PagedSpec | None = None, seed: int = 0):
+                 paged: PagedSpec | None = None, seed: int = 0,
+                 plan: ExecutionPlan | None = None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.packable = _packable(cfg)
+        if plan is not None and paged is None:
+            paged = plan.paged
         self.paged = paged if (paged and _has_pageable_layers(cfg)) else None
+        # THE serving plan: built once here, carried by every jitted call —
+        # no per-call paged=/lengths=/backend kwarg threading below this line
+        base = plan if plan is not None else plan_of(cfg)
+        self.plan = dataclasses.replace(base, paged=self.paged,
+                                        packed=self.packable)
         self.allocator = (PageAllocator(self.paged, slots, max_len)
                           if self.paged else None)
-        self.caches = lm.init_caches(cfg, slots, max_len, paged=self.paged)
+        self.caches = lm.init_caches(cfg, slots, max_len, plan=self.plan)
         self._key = jax.random.PRNGKey(seed)
         self._draws = 0
+        xplan = self.plan
 
         def step_fn(params, tok, caches, pos, table, temps, live, key, draw):
             logits, caches = lm.decode(params, tok, caches, cfg, pos,
-                                       page_table=table)
+                                       page_table=table, plan=xplan)
             tokens = sample_tokens(jax.random.fold_in(key, draw),
                                    logits, temps, live)
             return tokens, caches
@@ -178,7 +190,8 @@ class Worker:
         def prefill_fn(params, toks, lens, slot_ids, caches, pids, offs,
                        temps, key, draw):
             logits, new = lm.prefill(params, toks, cfg,
-                                     max_len=toks.shape[1], lengths=lens)
+                                     max_len=toks.shape[1], lengths=lens,
+                                     plan=xplan)
             caches = _install(caches, new, slot_ids, pids, offs)
             live = jnp.ones(toks.shape[0], bool)
             first = sample_tokens(jax.random.fold_in(key, draw),
@@ -187,7 +200,8 @@ class Worker:
 
         def prefill_one_fn(params, toks, slot_ids, caches, pids, offs,
                            temps, key, draw):
-            logits, new = lm.prefill(params, toks, cfg, max_len=max_len)
+            logits, new = lm.prefill(params, toks, cfg, max_len=max_len,
+                                     plan=xplan)
             caches = _install(caches, new, slot_ids, pids, offs)
             first = sample_tokens(jax.random.fold_in(key, draw),
                                   logits, temps, jnp.ones(1, bool))

@@ -27,6 +27,10 @@ def _qkv(key, b, hq, hkv, n, d, dv=None, dtype=jnp.float32):
 
 def _applicable(cfg, q, k, v, op="forward"):
     be = attention.get_backend(cfg.backend)
+    if be.shard_only:
+        # context-parallel glue resolves only for sharded ExecutionPlans;
+        # its grad parity runs on an 8-device mesh in test_context_parallel.py
+        return False
     ok, _ = be.supports(cfg, ShapeInfo.from_qkv(q, k, v),
                         jax.default_backend(), op=op, explicit=True)
     return ok

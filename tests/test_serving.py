@@ -368,22 +368,26 @@ def test_paged_never_fits_does_not_lose_batched_requests():
 
 
 def test_paged_decode_past_max_len_clamps_like_dense():
-    """A request whose budget would decode past max_len must not crash the
-    paged engine: page growth stops at the slot's row capacity and writes
-    clamp into the last page (the dense cache clamps the same way)."""
+    """A request whose budget decodes past max_len must clamp writes into
+    the last in-page offset exactly like the dense end-of-cache clamp —
+    same tokens, not just no crash (a page-index-only clamp wraps the
+    offset back onto attended context and diverges)."""
     cfg = get_smoke_config("flowformer_lm")
     cfg = dataclasses.replace(
         cfg, attention=dataclasses.replace(cfg.attention, kind="softmax")
     )
     params = lm.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(11)
-    engine = Engine(params, cfg, slots=1, max_len=16,
-                    paged=PagedSpec(page_size=16))
-    req = Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 8)
-                  .astype(np.int32), max_new_tokens=16)
-    engine.submit(req)
-    engine.run()
-    assert req.done and len(req.generated) == 16
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    generated = {}
+    for name, paged in (("dense", None), ("paged", PagedSpec(page_size=16))):
+        engine = Engine(params, cfg, slots=1, max_len=16, paged=paged)
+        req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=16)
+        engine.submit(req)
+        engine.run()
+        assert req.done and len(req.generated) == 16
+        generated[name] = req.generated
+    assert generated["paged"] == generated["dense"]
 
 
 def test_paged_admission_reserves_decode_budget():

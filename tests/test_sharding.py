@@ -106,22 +106,29 @@ def test_fsdp_and_microbatch_match_baseline():
 
 
 def test_context_parallel_flow_attention():
+    """Sharded ExecutionPlans resolve to the cp_* registry backends and
+    match the unsharded wrappers (tests/test_context_parallel.py holds the
+    deeper grad/prefill/inner-strategy coverage)."""
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import FlowConfig, flow_attention_nc, flow_attention_causal
-        from repro.core.context_parallel import make_context_parallel
+        from repro import attention
+        from repro.attention import ExecutionPlan, FlowConfig, ShardSpec
+        from repro.core import flow_attention_nc, flow_attention_causal
 
         mesh = jax.make_mesh((8,), ("model",))
         B,H,Hkv,N,D = 2,4,2,128,16
         q = jax.random.normal(jax.random.PRNGKey(0), (B,H,N,D))
         k = jax.random.normal(jax.random.PRNGKey(1), (B,Hkv,N,D))
         v = jax.random.normal(jax.random.PRNGKey(2), (B,Hkv,N,D))
+        shard = ShardSpec(axis="model", mesh=mesh)
         cfg = FlowConfig()
-        o_cp = jax.jit(make_context_parallel(mesh, cfg))(q, k, v)
+        ex = attention.resolve(ExecutionPlan(flow=cfg, shard=shard))
+        o_cp = jax.jit(ex.forward)(q, k, v)
         o_ref = flow_attention_nc(q, k, v, cfg)
         e1 = float(jnp.abs(o_cp - o_ref).max())
         cfg_c = FlowConfig(causal=True, strict_causal=True, chunk_size=8)
-        o_cp = jax.jit(make_context_parallel(mesh, cfg_c))(q, k, v)
+        ex_c = attention.resolve(ExecutionPlan(flow=cfg_c, shard=shard))
+        o_cp = jax.jit(ex_c.forward)(q, k, v)
         o_ref = flow_attention_causal(q, k, v, cfg_c)
         e2 = float(jnp.abs(o_cp - o_ref).max())
         print(e1, e2)
