@@ -10,6 +10,10 @@ state decode throughput per (variant, slots, context) cell:
     baseline Tab. 3 used to compare against).
   * ``paged``  — softmax served from the paged KV pool
     (``serving/paged.py``), the PagedAttention-style fair baseline.
+  * ``hybrid_rg`` — RecurrentGemma-style (rglru, rglru, attn) pattern and
+  * ``hybrid_m2`` — Mamba2-style pure-ssd pattern: hybrid stacks riding
+    the SequenceMixer registry through the SAME engine (packed admission
+    included); their decode must stay as context-flat as flow's.
 
 Cells are named ``serve_<ctx>`` so ``regression_gate.py`` sweeps them with
 the same tolerance machinery as the training/inference cells, and every
@@ -59,16 +63,30 @@ def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
 
 def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
         steps: int = 24) -> dict:
+    from repro.config import RGLRUConfig, SSDConfig
+
     base = get_config("flowformer_lm")
     base = dataclasses.replace(base, n_layers=2, d_model=128, n_heads=4,
                                n_kv_heads=4, d_ff=256, vocab_size=1024,
                                remat=False)
     page = PagedSpec(page_size=32)
-    variants = [("flow", "flow", None), ("softmax", "softmax", None),
-                ("paged", "softmax", page)]
+    hybrid_rg = dataclasses.replace(  # recurrentgemma-style 2:1 pattern
+        with_kind(base, "flow"), n_layers=3,
+        pattern=("rglru", "rglru", "attn"),
+        rglru=RGLRUConfig(conv_width=4, lru_width=0, n_blocks=4),
+    )
+    hybrid_m2 = dataclasses.replace(  # mamba2-style attention-free stack
+        with_kind(base, "flow"), pattern=("ssd",),
+        ssd=SSDConfig(d_state=32, expand=2, head_dim=32, conv_width=4,
+                      chunk_size=32),
+    )
+    variants = [("flow", with_kind(base, "flow"), None),
+                ("softmax", with_kind(base, "softmax"), None),
+                ("paged", with_kind(base, "softmax"), page),
+                ("hybrid_rg", hybrid_rg, None),
+                ("hybrid_m2", hybrid_m2, None)]
     rows = {}
-    for name, kind, paged in variants:
-        cfg = with_kind(base, kind)
+    for name, cfg, paged in variants:
         params = lm.init(jax.random.PRNGKey(0), cfg)
         for s in slots:
             row = {}

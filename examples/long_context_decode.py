@@ -13,12 +13,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
+from repro.layers.attention import plan_of
 from repro.models import lm
 
 
-def bench_decode(cfg, params, caches, pos, steps=20):
+def bench_decode(cfg, params, caches, pos, plan, steps=20):
     tok = jnp.zeros((1, 1), jnp.int32)
-    dec = jax.jit(lambda p, t, c, q: lm.decode(p, t, c, cfg, q))
+    dec = jax.jit(lambda p, t, c, q: lm.decode(p, t, c, cfg, q, plan=plan))
     logits, caches = dec(params, tok, caches, jnp.asarray(pos))  # compile
     jax.block_until_ready(logits)
     t0 = time.time()
@@ -28,15 +29,26 @@ def bench_decode(cfg, params, caches, pos, steps=20):
     return (time.time() - t0) / steps * 1e3
 
 
-def main():
-    cfg = get_smoke_config("granite_8b")  # flow attention by default
+def run(arch: str, note: str):
+    cfg = get_smoke_config(arch)
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    caches = lm.init_caches(cfg, batch=1, max_len=8)
+    # plan-first: ONE ExecutionPlan for the decode lifetime; every layer's
+    # lifecycle resolves through the SequenceMixer registry under it
+    plan = plan_of(cfg)
+    caches = lm.init_caches(cfg, batch=1, max_len=8, plan=plan)
     nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
-    print(f"flow decode state: {nbytes/1024:.1f} KiB, independent of context")
+    print(f"{cfg.name} ({note}) decode state: {nbytes/1024:.1f} KiB, "
+          "independent of context")
     for pos in (100, 10_000, 500_000):
-        ms = bench_decode(cfg, params, caches, pos)
+        ms = bench_decode(cfg, params, caches, pos, plan)
         print(f"  context position {pos:>7,d}: {ms:6.2f} ms/token")
+
+
+def main():
+    run("granite_8b", "flow attention")
+    # constant-size states are not attention-only: the hybrid RG-LRU stack
+    # decodes through the same loops with the same flat latency
+    run("recurrentgemma_9b", "hybrid rglru + flow")
     print("(same state, same latency — a 500k context costs what 100 does)")
 
 

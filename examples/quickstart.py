@@ -1,8 +1,9 @@
 """Quickstart: Flow-Attention as a drop-in linear attention.
 
 Shows (1) the core mechanism vs. a quadratic reference, (2) causal decoding
-from the O(d^2) recurrent state, (3) the backend registry, (4) linear
-scaling in sequence length.
+from the O(d^2) recurrent state — plan-first through the backend registry,
+(3) the registry's resolution report, (4) the layer-level SequenceMixer
+registry that serves hybrid stacks, (5) linear scaling in sequence length.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import attention
-from repro.attention import FlowConfig, decode_step, prefill
+from repro.attention import ExecutionPlan, FlowConfig
 from repro.core import flow_attention_causal, flow_attention_nc
 from repro.core.reference import flow_attention_nc_ref
 
@@ -38,21 +39,43 @@ def main():
     for name, ok, why in attention.explain(ccfg_probe, shapes):
         print(f"  {name:>13}: {'ok ' if ok else 'no '} ({why})")
 
-    # 2) causal prefill + recurrent decode: the whole "KV cache" is d x d
+    # 2) causal prefill + recurrent decode: the whole "KV cache" is d x d.
+    # Plan-first: build the ExecutionPlan once, execute through its executor.
     ccfg = FlowConfig(causal=True, strict_causal=True)
-    out_prefill, state = prefill(q[:, :, :128], k[:, :, :128], v[:, :, :128],
-                                 ccfg)
+    ex = attention.resolve(ExecutionPlan(flow=ccfg))
+    out_prefill, state = ex.prefill(q[:, :, :128], k[:, :, :128],
+                                    v[:, :, :128])
     state_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(state))
     print(f"decode state: {state_bytes/1024:.1f} KiB "
           f"(vs {B*H*128*D*2*2/1024:.1f} KiB for a 128-token bf16 KV cache "
           f"— and it NEVER grows)")
-    state, step_out = decode_step(state, q[:, :, 128:129], k[:, :, 128:129],
-                                  v[:, :, 128:129], ccfg)
+    state, step_out = ex.decode_step(state, q[:, :, 128:129],
+                                     k[:, :, 128:129], v[:, :, 128:129])
     full = flow_attention_causal(q[:, :, :129], k[:, :, :129], v[:, :, :129],
                                  ccfg)
     print(f"decode-step vs full-prefill max|err| = "
           f"{float(jnp.abs(step_out - full[:, :, 128:129]).max()):.2e}")
+
+    # 2b) one level up, whole LAYERS resolve the same way: the SequenceMixer
+    # registry gives every mixer kind (attention, RG-LRU, Mamba-2 SSD) the
+    # same lifecycle, with capability flags serving admission consults
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.layers.mixer import capability_matrix, list_mixers
+
+    mcfg = get_smoke_config("recurrentgemma_9b")  # hybrid: rglru + attention
+    mcfg = dataclasses.replace(  # softmax mode: "local" slots become rings
+        mcfg, attention=dataclasses.replace(mcfg.attention, kind="softmax")
+    )
+    print(f"\nsequence mixers {list_mixers()} vs {mcfg.name} (softmax mode):")
+    for kind, caps in capability_matrix(mcfg):
+        flags = " ".join(
+            f"{name}={'yes' if ok else 'NO'}"
+            for name, (ok, _) in caps.items()
+        )
+        print(f"  {kind:>6}: {flags}")
 
     # 3) linear scaling in N
     print("\nscaling (jit'd, CPU):")

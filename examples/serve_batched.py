@@ -2,7 +2,11 @@
 
 Highlights the O(d^2) flow-state serving model: slot memory is constant in
 context length, so admission never depends on how long a request's context
-is.  Compares against softmax-mode KV-cache serving on the same weights.
+is.  Compares against softmax-mode KV-cache serving on the same weights,
+and serves a *hybrid* RG-LRU/attention stack through the very same engine —
+the SequenceMixer registry gives every layer kind one lifecycle, and
+admission packs prompts whenever every layer reports the ``packable``
+capability.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -13,17 +17,16 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.layers.attention import plan_of
 from repro.models import lm
 from repro.serving.engine import Engine, Request
 
 
-def run(kind: str, prompts, max_new=24):
-    cfg = get_smoke_config("flowformer_lm")
-    cfg = dataclasses.replace(
-        cfg, attention=dataclasses.replace(cfg.attention, kind=kind)
-    )
+def run(cfg, label: str, prompts, max_new=24):
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    engine = Engine(params, cfg, slots=4, max_len=128)
+    # the serving ExecutionPlan is built ONCE; packed admission rides it
+    engine = Engine(params, cfg, slots=4, max_len=128,
+                    plan=plan_of(cfg, packed=True))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
             for i, p in enumerate(prompts)]
     for r in reqs:
@@ -36,8 +39,10 @@ def run(kind: str, prompts, max_new=24):
     toks = sum(len(r.generated) for r in reqs)
     cache_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(engine.caches))
-    print(f"  {kind:8s}: {toks} tokens in {dt:5.2f}s "
-          f"({toks/dt:6.1f} tok/s), cache memory {cache_bytes/1e6:.2f} MB")
+    packed = "packed" if engine.worker.packable else "per-request"
+    print(f"  {label:10s}: {toks} tokens in {dt:5.2f}s "
+          f"({toks/dt:6.1f} tok/s), cache memory {cache_bytes/1e6:.2f} MB, "
+          f"{packed} admission")
     return reqs
 
 
@@ -45,9 +50,17 @@ def main():
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, 512, rng.integers(8, 48)).astype(np.int32)
                for _ in range(10)]
+    base = get_smoke_config("flowformer_lm")
+    soft = dataclasses.replace(
+        base, attention=dataclasses.replace(base.attention, kind="softmax")
+    )
+    # hybrid stack (RecurrentGemma-style rglru + attention slots): serves
+    # through the same engine — rglru packs via boundary-frozen scans
+    hybrid = get_smoke_config("recurrentgemma_9b")
     print("continuous batching, 10 requests, 4 slots:")
-    flow_reqs = run("flow", prompts)
-    run("softmax", prompts)
+    flow_reqs = run(base, "flow", prompts)
+    run(soft, "softmax", prompts)
+    run(hybrid, "hybrid-rg", [p % hybrid.vocab_size for p in prompts])
     print(f"sample flow generation: {flow_reqs[0].generated[:12]}")
 
 

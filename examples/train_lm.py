@@ -8,8 +8,9 @@ configuration (recommended on real accelerators):
     PYTHONPATH=src python examples/train_lm.py --big    # ~110M params
 """
 import argparse
+import dataclasses
 
-from repro.config import AttentionConfig, ModelConfig
+from repro.config import AttentionConfig, ModelConfig, RGLRUConfig
 from repro.launch.train import train
 
 
@@ -22,6 +23,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/flowformer_lm_run")
     ap.add_argument("--attn", default="flow",
                     choices=["flow", "softmax", "linear"])
+    ap.add_argument("--pattern", default="attn",
+                    choices=["attn", "hybrid-rg"],
+                    help="block pattern: pure attention, or the "
+                    "RecurrentGemma-style (rglru, rglru, attn) hybrid — "
+                    "any registered mixer pattern trains through the same "
+                    "driver")
     args = ap.parse_args()
 
     if args.big:  # ~110M params: the paper-style 100M-class model
@@ -37,6 +44,12 @@ def main():
             n_kv_heads=6, d_ff=1536, vocab_size=8192, max_seq_len=512,
             act="gelu", norm="layernorm",
             attention=AttentionConfig(kind=args.attn),
+        )
+    if args.pattern == "hybrid-rg":
+        cfg = dataclasses.replace(
+            cfg, name=cfg.name + "-hybrid",
+            pattern=("rglru", "rglru", "attn"),
+            rglru=RGLRUConfig(conv_width=4, lru_width=0, n_blocks=6),
         )
     out = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                 ckpt_dir=args.ckpt_dir, ckpt_every=50)

@@ -60,19 +60,25 @@ def training_shapes(cfg: ModelConfig, shape: ShapeSpec):
 
 
 def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec, xplan=None):
-    """Fail fast if the configured flow backend cannot provide gradients.
+    """Fail fast if any configured execution path cannot provide gradients.
 
-    Resolves the training plan's forward with ``needs_grad=True`` at build
-    time so a pinned forward-only backend raises here — with every
-    backend's own rejection reason — instead of deep inside ``jax.grad``
-    tracing.
+    Two layers of build-time triage, both raising with self-reported
+    reasons instead of failing deep inside ``jax.grad`` tracing:
+
+    * every layer *kind* must be a differentiable mixer on this platform
+      (``resolve_mixers`` with a ``needs_grad`` plan — e.g. the ssd_chunk
+      Pallas kernel is forward-only on TPU and rejects by name);
+    * a pinned forward-only flow *backend* raises with every attention
+      backend's own rejection reason.
     """
-    if cfg.attention.kind != "flow":
-        return None
     from repro import attention
     from repro.layers.attention import flow_cfg_of, plan_of
+    from repro.layers.mixer import resolve_mixers
 
     xplan = xplan if xplan is not None else plan_of(cfg, needs_grad=True)
+    resolve_mixers(cfg, xplan)
+    if cfg.attention.kind != "flow":
+        return None
     shapes = training_shapes(cfg, shape)
     be = attention.resolve_for_training(
         xplan.with_shapes(shapes).with_flow(flow_cfg_of(cfg, causal=True)))

@@ -25,6 +25,7 @@ kwargs; this layer never names an execution path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -34,6 +35,7 @@ from repro import attention as flow_backend
 from repro.attention import BoundExecutor, ExecutionPlan, ShardSpec, init_state
 from repro.config import ModelConfig
 from repro.core.flow_attention import FlowConfig, phi_map
+from repro.layers import mixer as mixer_lib
 from repro.layers.linear import dense, dense_init
 from repro.layers.rope import apply_mrope, apply_rope
 from repro.serving.paged import PagedKVCache, PagedSpec, pages_for
@@ -88,6 +90,24 @@ def plan_of(cfg: ModelConfig, *, causal: bool = True,
     return ExecutionPlan(flow=flow_cfg_of(cfg, causal), shard=shard,
                          paged=paged, packed=packed, needs_grad=needs_grad,
                          platform=platform)
+
+
+@functools.lru_cache(maxsize=64)
+def _local_cfg(cfg: ModelConfig) -> ModelConfig:
+    # hybrid archs run "local" pattern slots as local sliding-window
+    # attention under softmax mode, and as flow attention in flow mode
+    # (the paper's replacement)
+    if cfg.attention.kind == "flow":
+        return cfg
+    att = dataclasses.replace(cfg.attention, kind="local")
+    return dataclasses.replace(cfg, attention=att)
+
+
+def dataclass_replace_attn(cfg: ModelConfig, kind: str) -> ModelConfig:
+    """Narrow a model config to one attention pattern slot ("attn"/"local")."""
+    if kind == "local":
+        return _local_cfg(cfg)
+    return cfg
 
 
 def _flow_executor(cfg: ModelConfig, causal: bool,
@@ -330,8 +350,8 @@ def attention(
     return dense(params["wo"], _merge_heads(out))
 
 
-def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16, *, paged: PagedSpec | None = None):
+def _attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, *, paged: PagedSpec | None = None):
     """Decode-cache for one layer.
 
     ``paged`` switches standard softmax KV layers to a ``PagedKVCache``
@@ -377,7 +397,7 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     )
 
 
-def attention_decode(
+def _attention_decode(
     params,
     x: Array,
     cache,
@@ -521,7 +541,7 @@ def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions
     return dense(params["wo"], _merge_heads(out)), MLACache(c_kv, k_rope, t + 1)
 
 
-def attention_prefill(
+def _attention_prefill(
     params, x: Array, cfg: ModelConfig, max_len: int, *,
     positions: Array | None = None, lengths: Array | None = None,
     plan: ExecutionPlan | None = None,
@@ -558,9 +578,14 @@ def attention_prefill(
         return dense(params["wo"], _merge_heads(out)), LinearState(s, z, pos0)
     if kind == "local":
         if lengths is not None:
-            raise NotImplementedError(
-                "packed prefill not supported for local attention "
-                "(per-row ring alignment)"
+            # callers reach this only by skipping resolution: the mixer
+            # registry reports local as non-packable and admission consults
+            # that capability instead of crashing mid-prefill
+            raise mixer_lib.MixerResolutionError(
+                "local attention cannot satisfy packed prefill — missing "
+                "capability packable: per-row ring alignment is "
+                "length-dependent",
+                (("local", "packable", "per-row ring alignment"),),
             )
         out = _local_attn(q, k, v, window=cfg.attention.window,
                           softcap=cfg.attention.softcap)
@@ -597,3 +622,90 @@ def attention_prefill(
     kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
     vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(x.dtype)
     return dense(params["wo"], _merge_heads(out)), KVCache(kc, vc, pos0)
+
+
+# ---------------------------------------------------------------------------
+# SequenceMixer registration + legacy-name shims
+# ---------------------------------------------------------------------------
+class AttentionMixer(mixer_lib.Mixer):
+    """The unified attention layer ("attn" pattern slots) as a registered
+    sequence mixer.  ``cfg.attention.kind`` still switches the mechanism
+    (flow/softmax/linear/MLA); the mixer protocol only owns the lifecycle."""
+
+    params_field = "attn"
+
+    def _cfg(self, cfg: ModelConfig) -> ModelConfig:
+        return cfg
+
+    def packable(self, cfg):
+        sub = self._cfg(cfg)
+        if sub.attention.kind == "local":
+            return False, ("local ring buffers have no per-row packed form "
+                           "(ring alignment is length-dependent)")
+        return True, "per-row boundary caches from one padded causal call"
+
+    def paged_capable(self, cfg):
+        sub = self._cfg(cfg)
+        if sub.mla is not None:
+            return False, ("MLA keeps its compressed dense latent cache "
+                           "(~an order smaller than raw KV)")
+        if sub.attention.kind == "softmax":
+            return True, "dense KV cache pages into the pool"
+        if sub.attention.kind == "local":
+            return False, "bounded ring buffer (nothing to page)"
+        return False, ("constant-size O(d^2) recurrent state "
+                       "(nothing to page)")
+
+    def differentiable(self, cfg, platform):
+        return True, ("gradient capability is judged per execution strategy "
+                      "by the attention backend registry (needs_grad plans)")
+
+    def init_params(self, key, cfg):
+        return attn_init(key, self._cfg(cfg))
+
+    def forward(self, params, x, cfg, *, positions=None, plan=None):
+        return attention(params, x, self._cfg(cfg), causal=True,
+                         positions=positions, plan=plan)
+
+    def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
+        paged = plan.paged if plan is not None else None
+        return _attn_cache_init(self._cfg(cfg), batch, max_len,
+                                dtype or jnp.bfloat16, paged=paged)
+
+    def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
+        return _attention_prefill(params, x, self._cfg(cfg), max_len,
+                                  positions=positions, plan=plan)
+
+    def prefill_packed(self, params, x, cfg, max_len, lengths, *,
+                       positions=None, plan=None):
+        return _attention_prefill(params, x, self._cfg(cfg), max_len,
+                                  positions=positions, lengths=lengths,
+                                  plan=plan)
+
+    def decode_step(self, params, x, state, cfg, *, positions=None,
+                    page_table=None, plan=None):
+        return _attention_decode(params, x, state, self._cfg(cfg),
+                                 positions=positions, page_table=page_table,
+                                 plan=plan)
+
+
+class LocalSlotMixer(AttentionMixer):
+    """"local" pattern slots (RecurrentGemma): local sliding-window
+    attention under softmax mode, flow attention in flow mode — the narrow
+    happens here so call sites never re-derive it."""
+
+    def _cfg(self, cfg: ModelConfig) -> ModelConfig:
+        return _local_cfg(cfg)
+
+
+mixer_lib.register_mixer("attn", AttentionMixer())
+mixer_lib.register_mixer("local", LocalSlotMixer())
+
+
+attn_cache_init = mixer_lib.make_legacy_shim(
+    "attention", "attn_cache_init", _attn_cache_init, "attn", "state_init")
+attention_prefill = mixer_lib.make_legacy_shim(
+    "attention", "attention_prefill", _attention_prefill, "attn", "prefill")
+attention_decode = mixer_lib.make_legacy_shim(
+    "attention", "attention_decode", _attention_decode, "attn",
+    "decode_step")

@@ -11,6 +11,13 @@ wrapped in the Griffin recurrent block: two input projections, a short
 causal depthwise conv on the recurrent branch, GeLU gating on the other,
 and an output projection.  The diagonal recurrence runs as a Blelchoch
 associative scan (TPU log-depth); decode carries (h, conv ring buffer).
+
+Serving rides the ``repro/layers/mixer`` SequenceMixer registry: this
+module registers the ``rglru`` kind, so hybrid stacks prefill/decode
+through the same loops as attention — including *packed* prefill, where
+per-row boundary states come out of ONE padded associative scan by
+freezing the recurrence past each row's boundary (a=1, b=0 ⇒ the carry
+stops moving) and gathering each row's trailing conv inputs.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.layers import mixer as mixer_lib
 from repro.layers.linear import dense, dense_init
 from repro.utils import KeySeq, lecun_normal
 
@@ -103,7 +111,7 @@ def rglru_block(params, x: Array, cfg: ModelConfig) -> Array:
     return dense(params["w_out"], h * gb)
 
 
-def rglru_state_init(cfg: ModelConfig, batch: int) -> RGLRUState:
+def _rglru_state_init(cfg: ModelConfig, batch: int) -> RGLRUState:
     w = cfg.rglru.lru_width or cfg.d_model
     return RGLRUState(
         h=jnp.zeros((batch, w), jnp.float32),
@@ -111,11 +119,40 @@ def rglru_state_init(cfg: ModelConfig, batch: int) -> RGLRUState:
     )
 
 
-def rglru_prefill(params, x: Array, cfg: ModelConfig):
+def _boundary_conv_history(xb: Array, lengths: Array, k: int) -> Array:
+    """Per-row trailing conv inputs AT each row's boundary.
+
+    xb: (B, N, W); lengths (B,).  Row i's decode conv history is its last
+    ``k-1`` inputs *before* position ``lengths[i]`` — zero-filled on the
+    left for rows shorter than the window, exactly like a fresh
+    ``_causal_conv`` pad.  One gather on the zero-padded stream: padded
+    index ``lengths + j`` is raw position ``lengths - (k-1) + j``.
+    """
+    bsz = xb.shape[0]
+    pad = jnp.zeros((bsz, k - 1, xb.shape[-1]), xb.dtype)
+    xp = jnp.concatenate([pad, xb], axis=1)  # (B, N+k-1, W)
+    idx = lengths.astype(jnp.int32)[:, None] + jnp.arange(k - 1)[None, :]
+    return jnp.take_along_axis(xp, idx[..., None], axis=1)
+
+
+def _rglru_prefill(params, x: Array, cfg: ModelConfig,
+                   lengths: Array | None = None):
+    """Prompt prefill; ``lengths`` (B,) packs right-padded prompts into the
+    SAME associative scan: gates at positions >= lengths[i] are frozen to
+    the identity element (a=1, b=0) so the scan carry — and therefore
+    ``h[:, -1]`` — is each row's boundary state, and the conv history is
+    gathered at each row's own boundary.  True positions are untouched
+    (the scan is causal); padded outputs are garbage the caller never
+    reads."""
     xb = dense(params["w_x"], x)
     gb = jax.nn.gelu(dense(params["w_gate"], x))
     xc, hist = _causal_conv(xb, params["conv_w"], params["conv_b"])
     a, b = _rglru_gates(params, xc)
+    if lengths is not None:
+        pad = (jnp.arange(x.shape[1])[None, :]
+               >= lengths.astype(jnp.int32)[:, None])[..., None]  # (B,N,1)
+        a = jnp.where(pad, 1.0, a)
+        b = jnp.where(pad, 0.0, b)
 
     def combine(p, q):
         a1, b1 = p
@@ -124,10 +161,12 @@ def rglru_prefill(params, x: Array, cfg: ModelConfig):
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     out = dense(params["w_out"], h.astype(x.dtype) * gb)
+    if lengths is not None:
+        hist = _boundary_conv_history(xb, lengths, cfg.rglru.conv_width)
     return out, RGLRUState(h=h[:, -1], conv=hist.astype(jnp.bfloat16))
 
 
-def rglru_decode(params, x: Array, state: RGLRUState, cfg: ModelConfig):
+def _rglru_decode(params, x: Array, state: RGLRUState, cfg: ModelConfig):
     """One-token decode.  x: (B, 1, d_model)."""
     xb = dense(params["w_x"], x)
     gb = jax.nn.gelu(dense(params["w_gate"], x))
@@ -137,3 +176,47 @@ def rglru_decode(params, x: Array, state: RGLRUState, cfg: ModelConfig):
     h = a[:, 0] * state.h + b[:, 0]
     out = dense(params["w_out"], h[:, None].astype(x.dtype) * gb)
     return out, RGLRUState(h=h, conv=hist.astype(jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# SequenceMixer registration + legacy-name shims
+# ---------------------------------------------------------------------------
+class RGLRUMixer(mixer_lib.Mixer):
+    """Griffin RG-LRU as a registered sequence mixer."""
+
+    params_field = "rglru"
+
+    def packable(self, cfg):
+        return True, ("boundary states via identity-frozen scan gates "
+                      "+ per-row conv-history gather")
+
+    def init_params(self, key, cfg):
+        return rglru_init(key, cfg)
+
+    def forward(self, params, x, cfg, *, positions=None, plan=None):
+        return rglru_block(params, x, cfg)
+
+    def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
+        return _rglru_state_init(cfg, batch)
+
+    def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
+        return _rglru_prefill(params, x, cfg)
+
+    def prefill_packed(self, params, x, cfg, max_len, lengths, *,
+                       positions=None, plan=None):
+        return _rglru_prefill(params, x, cfg, lengths=lengths)
+
+    def decode_step(self, params, x, state, cfg, *, positions=None,
+                    page_table=None, plan=None):
+        return _rglru_decode(params, x, state, cfg)
+
+
+mixer_lib.register_mixer("rglru", RGLRUMixer())
+
+
+rglru_state_init = mixer_lib.make_legacy_shim(
+    "rglru", "rglru_state_init", _rglru_state_init, "rglru", "state_init")
+rglru_prefill = mixer_lib.make_legacy_shim(
+    "rglru", "rglru_prefill", _rglru_prefill, "rglru", "prefill")
+rglru_decode = mixer_lib.make_legacy_shim(
+    "rglru", "rglru_decode", _rglru_decode, "rglru", "decode_step")

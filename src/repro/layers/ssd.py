@@ -24,9 +24,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.layers import mixer as mixer_lib
 from repro.layers.linear import dense, dense_init
 from repro.layers.norms import apply_norm, norm_init
-from repro.layers.rglru import _causal_conv
+from repro.layers.rglru import _boundary_conv_history, _causal_conv
 from repro.utils import KeySeq, lecun_normal
 
 Array = jax.Array
@@ -153,10 +154,18 @@ def ssd_block(params, x: Array, cfg: ModelConfig) -> Array:
     return out
 
 
-def _ssd_forward(params, x: Array, cfg: ModelConfig, state: SSDState | None):
+def _ssd_forward(params, x: Array, cfg: ModelConfig, state: SSDState | None,
+                 lengths: Array | None = None):
+    """``lengths`` (B,) packs right-padded prompts into ONE chunked scan:
+    dt at positions >= lengths[i] is zeroed, so the decay exp(dt*a) is 1
+    and the input term dt*x is 0 — the scan-carried state freezes at each
+    row's boundary and the final carry IS the per-row boundary state
+    (masked exactly like the cp boundary psums).  Conv histories are
+    gathered per row from the raw (pre-silu) component streams."""
     s, d_in, nh = _dims(cfg)
     bsz, n, _ = x.shape
     z, xh, bmat, cmat, dt = _split_in(params, x, cfg)
+    raw = (xh, bmat, cmat)
     hist = None if state is None else state.conv
     xh, bmat, cmat, new_hist = _conv_all(params, xh, bmat, cmat, hist)
     xh = jax.nn.silu(xh)
@@ -164,6 +173,13 @@ def _ssd_forward(params, x: Array, cfg: ModelConfig, state: SSDState | None):
     cmat = jax.nn.silu(cmat)
     xh = xh.reshape(bsz, n, nh, s.head_dim)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,N,H)
+    if lengths is not None:
+        live = (jnp.arange(n)[None, :]
+                < lengths.astype(jnp.int32)[:, None])  # (B,N)
+        dt = dt * live[..., None]
+        new_hist = tuple(
+            _boundary_conv_history(r, lengths, s.conv_width) for r in raw
+        )
     a = -jnp.exp(params["a_log"])  # (H,)
 
     h0 = None if state is None else state.h
@@ -202,7 +218,7 @@ def _ssd_scan_chunked_with_init(xh, dt, bmat, cmat, a, chunk, h0):
     return y + y_init, hf
 
 
-def ssd_state_init(cfg: ModelConfig, batch: int) -> SSDState:
+def _ssd_state_init(cfg: ModelConfig, batch: int) -> SSDState:
     s, d_in, nh = _dims(cfg)
     return SSDState(
         h=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
@@ -214,12 +230,13 @@ def ssd_state_init(cfg: ModelConfig, batch: int) -> SSDState:
     )
 
 
-def ssd_prefill(params, x: Array, cfg: ModelConfig):
-    state = ssd_state_init(cfg, x.shape[0])
-    return _ssd_forward(params, x, cfg, state)
+def _ssd_prefill(params, x: Array, cfg: ModelConfig,
+                 lengths: Array | None = None):
+    state = _ssd_state_init(cfg, x.shape[0])
+    return _ssd_forward(params, x, cfg, state, lengths=lengths)
 
 
-def ssd_decode(params, x: Array, state: SSDState, cfg: ModelConfig):
+def _ssd_decode(params, x: Array, state: SSDState, cfg: ModelConfig):
     """One-token decode via the plain recurrence.  x: (B, 1, d_model)."""
     s, d_in, nh = _dims(cfg)
     bsz = x.shape[0]
@@ -242,3 +259,60 @@ def ssd_decode(params, x: Array, state: SSDState, cfg: ModelConfig):
     y = y.reshape(bsz, 1, d_in).astype(x.dtype)
     y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
     return dense(params["out_proj"], y), SSDState(h=h, conv=jax.tree.map(lambda t: t.astype(jnp.bfloat16), hist))
+
+
+# ---------------------------------------------------------------------------
+# SequenceMixer registration + legacy-name shims
+# ---------------------------------------------------------------------------
+class SSDMixer(mixer_lib.Mixer):
+    """Mamba-2 SSD as a registered sequence mixer.
+
+    ``block_ffn=False``: the Mamba block IS the whole layer (gated SSM +
+    out-projection, no separate FFN sublayer).
+    """
+
+    params_field = "ssd"
+    block_ffn = False
+
+    def packable(self, cfg):
+        return True, ("boundary states via dt-masked chunked scan "
+                      "+ per-row conv-history gathers")
+
+    def differentiable(self, cfg, platform):
+        if platform == "tpu":
+            return False, (
+                "the ssd_chunk Pallas kernel is forward-only (no VJP yet — "
+                "see ROADMAP); train off-TPU or pin the XLA scan path"
+            )
+        return True, "chunked XLA scan is natively differentiable"
+
+    def init_params(self, key, cfg):
+        return ssd_init(key, cfg)
+
+    def forward(self, params, x, cfg, *, positions=None, plan=None):
+        return ssd_block(params, x, cfg)
+
+    def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
+        return _ssd_state_init(cfg, batch)
+
+    def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
+        return _ssd_prefill(params, x, cfg)
+
+    def prefill_packed(self, params, x, cfg, max_len, lengths, *,
+                       positions=None, plan=None):
+        return _ssd_prefill(params, x, cfg, lengths=lengths)
+
+    def decode_step(self, params, x, state, cfg, *, positions=None,
+                    page_table=None, plan=None):
+        return _ssd_decode(params, x, state, cfg)
+
+
+mixer_lib.register_mixer("ssd", SSDMixer())
+
+
+ssd_state_init = mixer_lib.make_legacy_shim(
+    "ssd", "ssd_state_init", _ssd_state_init, "ssd", "state_init")
+ssd_prefill = mixer_lib.make_legacy_shim(
+    "ssd", "ssd_prefill", _ssd_prefill, "ssd", "prefill")
+ssd_decode = mixer_lib.make_legacy_shim(
+    "ssd", "ssd_decode", _ssd_decode, "ssd", "decode_step")

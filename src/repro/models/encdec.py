@@ -16,13 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.layers.attention import (
-    attention,
-    attention_decode,
-    attn_cache_init,
-    attn_init,
-)
+from repro.layers.attention import attention, attn_init
 from repro.layers.embeddings import embed, embedding_init, unembed
+from repro.layers.mixer import resolve_mixer
 from repro.layers.ffn import ffn, ffn_init
 from repro.layers.norms import apply_norm, norm_init
 from repro.layers.rope import default_positions
@@ -122,9 +118,9 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16):
 # Serving
 # ---------------------------------------------------------------------------
 def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int):
+    mx = resolve_mixer("attn", cfg)  # decoder self-attention lifecycle
     return [
-        {"self": attn_cache_init(cfg, batch, max_len)}
-        for _ in range(cfg.n_layers)
+        {"self": mx.state_init(batch, max_len)} for _ in range(cfg.n_layers)
     ]
 
 
@@ -134,11 +130,12 @@ def decode_step(params, token: Array, memory: Array, caches, cfg: ModelConfig,
     b = token.shape[0]
     x = embed(params["embed"], token, dtype)
     positions = default_positions(b, 1, pos)
+    mx = resolve_mixer("attn", cfg)
     new_caches = []
     for i, bp in enumerate(params["decoder"]):
         h = apply_norm(bp["norm1"], x, cfg.norm)
-        y, self_cache = attention_decode(bp["self_attn"], h, caches[i]["self"],
-                                         cfg, positions=positions)
+        y, self_cache = mx.decode_step(bp["self_attn"], h, caches[i]["self"],
+                                       positions=positions)
         x = x + y
         h = apply_norm(bp["norm_x"], x, cfg.norm)
         # cross-attention: this token is the single sink (n=1 flow attention)

@@ -5,6 +5,13 @@ period = e.g. ("rglru", "rglru", "attn") for RecurrentGemma) with stacked
 parameters, keeping HLO size O(pattern) instead of O(layers); remainder
 layers run unrolled.  Remat wraps each period when ``cfg.remat``.
 
+Which mechanism runs a block comes from ``cfg.block_kind`` (the single
+source of truth) through the ``repro/layers/mixer`` SequenceMixer registry
+— init/forward/state_init/prefill/decode below are single loops over
+resolved mixers, never ``if kind ==`` ladders, so hybrid stacks (rglru /
+ssd / local slots) serve through exactly the same code path as pure
+attention, packed admission included.
+
 Entry points:
   init / forward / loss_fn            training
   init_caches / prefill / decode      serving (flow state or KV cache)
@@ -18,32 +25,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.layers.attention import (
-    attention,
-    attention_decode,
-    attention_prefill,
-    attn_cache_init,
-    attn_init,
-)
 from repro.layers.embeddings import embed, embedding_init, unembed
 from repro.layers.ffn import ffn, ffn_init
+from repro.layers.mixer import (
+    resolve_layer_mixer,
+    resolve_mixer,
+    resolve_mixers,
+)
 from repro.layers.moe import moe, moe_init
 from repro.layers.norms import apply_norm, norm_init
-from repro.layers.rglru import (
-    rglru_block,
-    rglru_decode,
-    rglru_init,
-    rglru_prefill,
-    rglru_state_init,
-)
 from repro.layers.rope import default_mrope_positions, default_positions
-from repro.layers.ssd import (
-    ssd_block,
-    ssd_decode,
-    ssd_init,
-    ssd_prefill,
-    ssd_state_init,
-)
 from repro.utils import KeySeq
 
 Array = jax.Array
@@ -55,15 +46,9 @@ Array = jax.Array
 def _block_init(key, kind: str, cfg: ModelConfig) -> dict:
     ks = KeySeq(key)
     d = cfg.d_model
-    if kind in ("attn", "local"):
-        p = {"norm1": norm_init(d, cfg.norm), "attn": attn_init(ks(), cfg)}
-    elif kind == "rglru":
-        p = {"norm1": norm_init(d, cfg.norm), "rglru": rglru_init(ks(), cfg)}
-    elif kind == "ssd":
-        p = {"norm1": norm_init(d, cfg.norm), "ssd": ssd_init(ks(), cfg)}
-    else:
-        raise ValueError(kind)
-    if cfg.d_ff > 0 and kind != "ssd":
+    mx = resolve_mixer(kind, cfg)
+    p = {"norm1": norm_init(d, cfg.norm), mx.params_field: mx.init_params(ks())}
+    if cfg.d_ff > 0 and mx.block_ffn:
         p["norm2"] = norm_init(d, cfg.norm)
         if cfg.moe is not None:
             p["moe"] = moe_init(ks(), d, cfg.d_ff, cfg.act, cfg.moe)
@@ -73,33 +58,8 @@ def _block_init(key, kind: str, cfg: ModelConfig) -> dict:
 
 
 def _mixer(params, x, kind: str, cfg: ModelConfig, positions, plan=None):
-    if kind in ("attn", "local"):
-        sub = dataclass_replace_attn(cfg, kind)
-        return attention(params["attn"], x, sub, causal=True,
-                         positions=positions, plan=plan)
-    if kind == "rglru":
-        return rglru_block(params["rglru"], x, cfg)
-    if kind == "ssd":
-        return ssd_block(params["ssd"], x, cfg)
-    raise ValueError(kind)
-
-
-@functools.lru_cache(maxsize=64)
-def _local_cfg(cfg: ModelConfig) -> ModelConfig:
-    import dataclasses
-
-    # hybrid archs run "local" slots as local attention under softmax mode,
-    # and as flow attention in flow mode (the paper's replacement)
-    if cfg.attention.kind == "flow":
-        return cfg
-    att = dataclasses.replace(cfg.attention, kind="local")
-    return dataclasses.replace(cfg, attention=att)
-
-
-def dataclass_replace_attn(cfg: ModelConfig, kind: str) -> ModelConfig:
-    if kind == "local":
-        return _local_cfg(cfg)
-    return cfg
+    mx = resolve_layer_mixer(kind, cfg, plan)
+    return mx.forward(params[mx.params_field], x, positions=positions)
 
 
 def _block_apply(params, x, kind: str, cfg: ModelConfig, positions, plan=None):
@@ -250,25 +210,23 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, *, dtype=jnp.bfloat16,
 # Serving: prefill + decode with per-layer caches
 # ---------------------------------------------------------------------------
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *, paged=None,
-                plan=None):
+                plan=None, dtype=None):
     """Per-layer decode caches.  ``paged`` (a ``serving.paged.PagedSpec``,
     or carried by ``plan.paged`` — the plan-first spelling) switches
     standard softmax KV layers to the shared page pool; all other cache
     kinds are unaffected (flow/linear/rglru/ssd states are already
-    constant-size, local rings already bounded)."""
-    if plan is not None and plan.paged is not None:
-        paged = plan.paged
-    caches = []
-    for i in range(cfg.n_layers):
-        kind = cfg.block_kind(i)
-        if kind in ("attn", "local"):
-            sub = dataclass_replace_attn(cfg, kind)
-            caches.append(attn_cache_init(sub, batch, max_len, paged=paged))
-        elif kind == "rglru":
-            caches.append(rglru_state_init(cfg, batch))
-        elif kind == "ssd":
-            caches.append(ssd_state_init(cfg, batch))
-    return caches
+    constant-size, local rings already bounded).  ``dtype`` is the serving
+    activation dtype for caches that follow it (dense KV; default
+    bfloat16)."""
+    if paged is not None and (plan is None or plan.paged is None):
+        # legacy facade sugar: fold the bare ``paged=`` spec into the plan
+        import dataclasses
+
+        from repro.layers.attention import plan_of
+
+        plan = dataclasses.replace(plan or plan_of(cfg), paged=paged)
+    return [mx.state_init(batch, max_len, dtype=dtype)
+            for mx in resolve_mixers(cfg, plan)]
 
 
 def _blocks_list(params, cfg: ModelConfig):
@@ -291,33 +249,21 @@ def prefill(params, inputs: Array, cfg: ModelConfig, max_len: int,
     (continuous-batching admission): every layer is causal or position-wise
     so padding never leaks into true positions, per-row cache state lands
     at each row's own boundary, and the returned logits are gathered at
-    position ``lengths[i]-1`` per row.  Only attention-block architectures
-    support packing (rglru/ssd scans return final-position state only)."""
+    position ``lengths[i]-1`` per row.  Packing requires every layer's
+    mixer to report the ``packable`` capability (rglru/ssd scans freeze
+    their recurrences at each row's boundary; local rings decline —
+    admission consults the flag and falls back per request)."""
     b, n = inputs.shape[0], inputs.shape[1]
     x = _embed_inputs(params, inputs, cfg, dtype)
     positions = (default_mrope_positions(b, n) if cfg.rope == "mrope"
                  else default_positions(b, n))
     caches = []
+    mixers = resolve_mixers(cfg, plan)
     for i, bp in enumerate(_blocks_list(params, cfg)):
-        kind = cfg.block_kind(i)
+        mx = mixers[i]
         h = apply_norm(bp["norm1"], x, cfg.norm)
-        if kind in ("attn", "local"):
-            sub = dataclass_replace_attn(cfg, kind)
-            y, cache = attention_prefill(bp["attn"], h, sub, max_len,
-                                         positions=positions, lengths=lengths,
-                                         plan=plan)
-        elif kind == "rglru":
-            if lengths is not None:
-                raise NotImplementedError(
-                    "packed prefill not supported for rglru layers"
-                )
-            y, cache = rglru_prefill(bp["rglru"], h, cfg)
-        else:
-            if lengths is not None:
-                raise NotImplementedError(
-                    "packed prefill not supported for ssd layers"
-                )
-            y, cache = ssd_prefill(bp["ssd"], h, cfg)
+        y, cache = mx.prefill(bp[mx.params_field], h, max_len,
+                              positions=positions, lengths=lengths)
         caches.append(cache)
         x = x + y
         if "ffn" in bp:
@@ -358,18 +304,13 @@ def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
         else default_positions(b, 1, pos)
     )
     new_caches = []
+    mixers = resolve_mixers(cfg, plan)
     for i, bp in enumerate(_blocks_list(params, cfg)):
-        kind = cfg.block_kind(i)
+        mx = mixers[i]
         h = apply_norm(bp["norm1"], x, cfg.norm)
-        if kind in ("attn", "local"):
-            sub = dataclass_replace_attn(cfg, kind)
-            y, cache = attention_decode(bp["attn"], h, caches[i], sub,
-                                        positions=positions,
-                                        page_table=page_table, plan=plan)
-        elif kind == "rglru":
-            y, cache = rglru_decode(bp["rglru"], h, caches[i], cfg)
-        else:
-            y, cache = ssd_decode(bp["ssd"], h, caches[i], cfg)
+        y, cache = mx.decode_step(bp[mx.params_field], h, caches[i],
+                                  positions=positions,
+                                  page_table=page_table)
         new_caches.append(cache)
         x = x + y
         if "ffn" in bp:

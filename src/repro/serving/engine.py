@@ -30,6 +30,13 @@ Softmax-mode engines (KV caches) work through the same interface for
 baseline comparisons (Tab. 3 at scale); ``paged=PagedSpec(...)`` switches
 their dense ``max_len`` caches to the paged pool in ``paged.py`` so the
 baseline's memory also tracks live tokens instead of worst case.
+
+There is no attention-only assumption anywhere in the loop: layer
+lifecycles resolve through the ``repro/layers/mixer`` SequenceMixer
+registry, so hybrid stacks (RG-LRU, Mamba-2 SSD, local slots) serve
+through the same packed-admission, fused-sampling engine — admission
+consults each kind's ``packable`` capability instead of special-casing
+architectures.
 """
 from __future__ import annotations
 
@@ -49,18 +56,21 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 4096, seed: int = 0,
-                 paged: PagedSpec | bool | None = None, plan=None):
+                 paged: PagedSpec | bool | None = None, plan=None,
+                 dtype=None):
         """``plan`` (an ``attention.ExecutionPlan``) carries the serving
         execution context built once by the caller; ``paged=`` remains as
-        facade sugar and is folded into the worker's plan."""
+        facade sugar and is folded into the worker's plan.  ``dtype``
+        overrides the serving activation dtype (default bfloat16)."""
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         if paged is True:
             paged = PagedSpec()
         self.scheduler = Scheduler(slots)
+        kw = {} if dtype is None else {"dtype": dtype}
         self.worker = Worker(params, cfg, slots=slots, max_len=max_len,
-                             paged=paged or None, seed=seed, plan=plan)
+                             paged=paged or None, seed=seed, plan=plan, **kw)
 
     # -- facade conveniences (examples/tests poke at these) -------------
     @property

@@ -13,9 +13,15 @@ computations:
   (``lm.prefill(..., lengths=...)``, exact by causality), the resulting
   per-row caches are installed into their slots by one jitted scatter, and
   the first tokens are sampled with the same batched sampler.
-* a per-request fallback prefill for architectures whose recurrences
-  cannot pack (rglru/ssd scans, local-attention rings) — same scatter
-  install, batch of one.
+* a per-request fallback prefill for stacks with a layer whose mixer
+  reports ``packable=False`` (today: local-attention rings; rglru/ssd
+  scans pack via boundary-frozen recurrences) — same scatter install,
+  batch of one.
+
+Which stacks pack, page, or train is not hardcoded here: admission
+consults the ``repro/layers/mixer`` SequenceMixer capability flags, so a
+newly registered mixer kind serves through this Worker the day it
+registers.
 
 Paged softmax caches (``serving/paged.py``) ride the same paths: the
 host-side allocator maps pages at admission/page boundaries and the page
@@ -33,8 +39,8 @@ from repro.attention.plan import ExecutionPlan
 from repro.attention.recurrent import FlowState
 from repro.config import ModelConfig
 from repro.layers.attention import KVCache, LinearState, MLACache, plan_of
+from repro.layers.mixer import stack_capabilities
 from repro.models import lm
-from repro.models.lm import dataclass_replace_attn
 from repro.serving.paged import (
     PageAllocator,
     PagedKVCache,
@@ -67,29 +73,16 @@ def sample_tokens(key, logits: Array, temps: Array, live: Array) -> Array:
 
 
 def _packable(cfg: ModelConfig) -> bool:
-    """Can prompts be right-padded into one prefill call?  True when every
-    layer either supports per-row boundary states (flow/softmax/MLA/linear
-    attention) or does not exist in the stack (rglru/ssd scans and local
-    rings return final-position state only)."""
-    for i in range(cfg.n_layers):
-        kind = cfg.block_kind(i)
-        if kind in ("rglru", "ssd"):
-            return False
-        sub = dataclass_replace_attn(cfg, kind)
-        if sub.attention.kind == "local":
-            return False
-    return True
+    """Can prompts be right-padded into one prefill call?  The mixer
+    registry answers: every layer's kind must report the ``packable``
+    capability (per-row boundary states from one padded call)."""
+    return stack_capabilities(cfg)["packable"][0]
 
 
 def _has_pageable_layers(cfg: ModelConfig) -> bool:
-    if cfg.mla is not None:
-        return False
-    for i in range(cfg.n_layers):
-        if cfg.block_kind(i) in ("attn", "local"):
-            sub = dataclass_replace_attn(cfg, cfg.block_kind(i))
-            if sub.attention.kind == "softmax":
-                return True
-    return False
+    """Is a paged pool worth allocating?  True when at least one layer's
+    mixer can serve from it (dense softmax KV caches)."""
+    return stack_capabilities(cfg)["paged_capable"][0]
 
 
 def _bucket_len(n: int, max_len: int) -> int:
@@ -159,11 +152,17 @@ class Worker:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
                  paged: PagedSpec | None = None, seed: int = 0,
-                 plan: ExecutionPlan | None = None):
+                 plan: ExecutionPlan | None = None, dtype=jnp.bfloat16):
+        """``dtype`` — serving activation dtype (default bfloat16; fp32
+        makes engine generations bit-comparable to an fp32 per-request
+        oracle, which parity tests use: bf16's ~8 mantissa bits round
+        differently across the packed batch's matmul shapes and can flip a
+        near-tied greedy argmax)."""
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
+        self.dtype = dtype
         self.packable = _packable(cfg)
         if plan is not None and paged is None:
             paged = plan.paged
@@ -175,14 +174,16 @@ class Worker:
                                         packed=self.packable)
         self.allocator = (PageAllocator(self.paged, slots, max_len)
                           if self.paged else None)
-        self.caches = lm.init_caches(cfg, slots, max_len, plan=self.plan)
+        self.caches = lm.init_caches(cfg, slots, max_len, plan=self.plan,
+                                     dtype=dtype)
         self._key = jax.random.PRNGKey(seed)
         self._draws = 0
         xplan = self.plan
 
         def step_fn(params, tok, caches, pos, table, temps, live, key, draw):
             logits, caches = lm.decode(params, tok, caches, cfg, pos,
-                                       page_table=table, plan=xplan)
+                                       page_table=table, plan=xplan,
+                                       dtype=dtype)
             tokens = sample_tokens(jax.random.fold_in(key, draw),
                                    logits, temps, live)
             return tokens, caches
@@ -191,7 +192,7 @@ class Worker:
                        temps, key, draw):
             logits, new = lm.prefill(params, toks, cfg,
                                      max_len=toks.shape[1], lengths=lens,
-                                     plan=xplan)
+                                     plan=xplan, dtype=dtype)
             caches = _install(caches, new, slot_ids, pids, offs)
             live = jnp.ones(toks.shape[0], bool)
             first = sample_tokens(jax.random.fold_in(key, draw),
@@ -201,7 +202,7 @@ class Worker:
         def prefill_one_fn(params, toks, slot_ids, caches, pids, offs,
                            temps, key, draw):
             logits, new = lm.prefill(params, toks, cfg, max_len=max_len,
-                                     plan=xplan)
+                                     plan=xplan, dtype=dtype)
             caches = _install(caches, new, slot_ids, pids, offs)
             first = sample_tokens(jax.random.fold_in(key, draw),
                                   logits, temps, jnp.ones(1, bool))
@@ -266,7 +267,8 @@ class Worker:
                 jnp.asarray(temps, jnp.float32), self._key, self._next_draw(),
             )
             return np.asarray(first)
-        # fallback: one prefill per request (rglru/ssd/local stacks)
+        # fallback: one prefill per request (stacks with a non-packable
+        # mixer — today local-attention rings)
         firsts = np.zeros(len(prompts), np.int32)
         for i, (p, slot) in enumerate(zip(prompts, slot_ids)):
             pids = offs = None

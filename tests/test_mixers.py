@@ -1,0 +1,215 @@
+"""SequenceMixer registry: resolution, capability rejection, packed parity.
+
+The mixer registry (repro/layers/mixer.py) is the layer-level analogue of
+the attention backend registry: every block kind registers canonical
+lifecycle ops plus capability flags, ``resolve_mixer`` enforces a plan's
+demands with named-capability rejections, and the packed-prefill ops must
+produce per-row boundary states identical to per-row prefill.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.layers import mixer as mixer_lib
+from repro.layers.attention import plan_of
+from repro.layers.mixer import (
+    MixerResolutionError,
+    capability_matrix,
+    get_mixer,
+    list_mixers,
+    resolve_mixer,
+    resolve_mixers,
+    stack_capabilities,
+)
+from repro.serving.paged import PagedSpec
+
+from conftest import assert_close
+
+
+def _softmax_rg():
+    cfg = get_smoke_config("recurrentgemma_9b")
+    return dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, kind="softmax")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution contract
+# ---------------------------------------------------------------------------
+def test_builtin_kinds_registered():
+    assert set(list_mixers()) >= {"attn", "local", "rglru", "ssd"}
+
+
+def test_unknown_kind_lists_registered():
+    cfg = get_smoke_config("flowformer_lm")
+    with pytest.raises(MixerResolutionError, match="attn"):
+        resolve_mixer("nope", cfg)
+
+
+def test_paged_plan_rejects_non_attention_kinds():
+    """The acceptance example: paged + non-attn names the capability."""
+    cfg = get_smoke_config("mamba2_1p3b")
+    plan = plan_of(cfg, paged=PagedSpec())
+    with pytest.raises(MixerResolutionError, match="paged_capable") as ei:
+        resolve_mixer("ssd", cfg, plan)
+    assert ("ssd", "paged_capable") in [r[:2] for r in ei.value.rejections]
+    with pytest.raises(MixerResolutionError, match="paged_capable"):
+        resolve_mixer("rglru", get_smoke_config("recurrentgemma_9b"),
+                      plan_of(cfg, paged=PagedSpec()))
+
+
+def test_packed_plan_rejects_local_rings():
+    cfg = _softmax_rg()
+    plan = plan_of(cfg, packed=True)
+    with pytest.raises(MixerResolutionError, match="packable"):
+        resolve_mixer("local", cfg, plan)
+    # the whole-stack resolution surfaces the same named rejection
+    with pytest.raises(MixerResolutionError, match="packable"):
+        resolve_mixers(cfg, plan)
+    # ...while the flow-mode hybrid packs every layer
+    flow_cfg = get_smoke_config("recurrentgemma_9b")
+    assert len(resolve_mixers(flow_cfg, plan_of(flow_cfg, packed=True))) \
+        == flow_cfg.n_layers
+
+
+def test_needs_grad_plan_rejects_forward_only_tpu_ssd():
+    """ssd's TPU training path is the forward-only Pallas kernel; a
+    needs_grad plan pinned to platform='tpu' must fail at resolution with
+    the capability named (build-time, not inside jax.grad)."""
+    cfg = get_smoke_config("mamba2_1p3b")
+    plan = plan_of(cfg, needs_grad=True, platform="tpu")
+    with pytest.raises(MixerResolutionError, match="differentiable"):
+        resolve_mixer("ssd", cfg, plan)
+    # off-TPU the chunked XLA scan differentiates fine
+    assert resolve_mixer("ssd", cfg,
+                         plan_of(cfg, needs_grad=True, platform="cpu"))
+
+
+def test_paged_spec_is_narrowed_per_layer_not_rejected():
+    """Model-level resolution strips the paged pool from layers that
+    cannot page instead of failing the stack: a softmax hybrid engine
+    pages its attn layers while rglru/local keep constant-size states."""
+    cfg = _softmax_rg()
+    plan = plan_of(cfg, paged=PagedSpec())
+    mixers = resolve_mixers(cfg, plan)
+    assert len(mixers) == cfg.n_layers
+    by_kind = {m.kind: m for m in mixers}
+    assert by_kind["local"].plan is None or by_kind["local"].plan.paged is None
+    assert by_kind["rglru"].plan is None or by_kind["rglru"].plan.paged is None
+
+
+def test_stack_capabilities_and_matrix():
+    cfg = _softmax_rg()
+    caps = stack_capabilities(cfg)
+    assert caps["packable"][0] is False  # local rings in the stack
+    assert caps["packable"][1] == "local"
+    assert caps["paged_capable"][0] is False  # no plain softmax slot pages
+    m2 = get_smoke_config("mamba2_1p3b")
+    assert stack_capabilities(m2)["packable"][0] is True
+    rows = dict(capability_matrix(cfg))
+    assert rows["attn"]["paged_capable"][0] is True
+    assert rows["local"]["packable"][0] is False
+    assert rows["ssd"]["paged_capable"][0] is False
+
+
+def test_custom_mixer_registration_and_cleanup():
+    """A third-party kind registers once and the serving stack consults
+    its capabilities — no call-site edits; non-packable kinds push the
+    Worker onto the per-request fallback path."""
+
+    class Stub(mixer_lib.Mixer):
+        params_field = "stub"
+
+        def packable(self, cfg):
+            return False, "stub scan returns final-position state only"
+
+    try:
+        mixer_lib.register_mixer("stub", Stub())
+        cfg = get_smoke_config("flowformer_lm")
+        with pytest.raises(MixerResolutionError, match="packable"):
+            resolve_mixer("stub", cfg, plan_of(cfg, packed=True))
+        with pytest.raises(ValueError, match="already registered"):
+            mixer_lib.register_mixer("stub", Stub())
+    finally:
+        mixer_lib._REGISTRY.pop("stub", None)
+
+
+# ---------------------------------------------------------------------------
+# Packed prefill == per-row prefill, at the layer level
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,kind", [
+    ("recurrentgemma_9b", "rglru"), ("mamba2_1p3b", "ssd"),
+])
+def test_packed_prefill_matches_per_row_states(arch, kind):
+    cfg = get_smoke_config(arch)
+    mx = resolve_mixer(kind, cfg)
+    params = mx.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = np.array([5, 16, 9], np.int32)
+    n = 16
+    x = jnp.asarray(rng.normal(size=(3, n, cfg.d_model)), jnp.float32)
+    # zero padded positions so per-row slices are literally the same inputs
+    x = x * (np.arange(n)[None, :, None] < lens[:, None, None])
+    out_p, state_p = mx.prefill(params, x, n, lengths=jnp.asarray(lens))
+    for i, li in enumerate(lens):
+        out_s, state_s = mx.prefill(params, x[i : i + 1, :li], int(li))
+        assert_close(out_p[i : i + 1, :li], out_s, rtol=1e-3, atol=1e-4,
+                     msg=f"{kind} outputs row {i}")
+        for a, b in zip(jax.tree.leaves(state_p), jax.tree.leaves(state_s)):
+            assert_close(a[i : i + 1], b, rtol=1e-3, atol=1e-4,
+                         msg=f"{kind} state row {i}")
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("recurrentgemma_9b", "rglru"), ("mamba2_1p3b", "ssd"),
+])
+def test_packed_boundary_state_decodes_like_per_row(arch, kind):
+    """The packed boundary state must hand off to decode_step exactly like
+    a per-row prefill state (the serving admission contract)."""
+    cfg = get_smoke_config(arch)
+    mx = resolve_mixer(kind, cfg)
+    params = mx.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    lens = np.array([3, 11], np.int32)
+    n = 11
+    x = jnp.asarray(rng.normal(size=(2, n, cfg.d_model)), jnp.float32)
+    x = x * (np.arange(n)[None, :, None] < lens[:, None, None])
+    tok = jnp.asarray(rng.normal(size=(2, 1, cfg.d_model)), jnp.float32)
+    _, state_p = mx.prefill(params, x, n, lengths=jnp.asarray(lens))
+    y_p, _ = mx.decode_step(params, tok, state_p)
+    for i, li in enumerate(lens):
+        _, state_s = mx.prefill(params, x[i : i + 1, :li], int(li))
+        y_s, _ = mx.decode_step(params, tok[i : i + 1], state_s)
+        assert_close(y_p[i : i + 1], y_s, rtol=1e-3, atol=1e-4,
+                     msg=f"{kind} decode row {i}")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("module,name,call", [
+    ("repro.layers.rglru", "rglru_state_init", "state"),
+    ("repro.layers.ssd", "ssd_state_init", "state"),
+    ("repro.layers.attention", "attn_cache_init", "state"),
+])
+def test_legacy_names_warn_once_and_behave(module, name, call):
+    import importlib
+
+    mod = importlib.import_module(module)
+    cfg = (get_smoke_config("mamba2_1p3b") if "ssd" in module
+           else get_smoke_config("recurrentgemma_9b"))
+    fn = getattr(mod, name)
+    mixer_lib._reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="resolve_mixer"):
+        a = fn(cfg, 2) if "attention" not in module else fn(cfg, 2, 8)
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second call must NOT warn
+        b = fn(cfg, 2) if "attention" not in module else fn(cfg, 2, 8)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.shape == y.shape

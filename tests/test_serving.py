@@ -111,19 +111,8 @@ def test_engine_matches_unbatched_greedy():
     prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
                for _ in range(3)]
 
-    def solo(prompt):
-        toks = jnp.asarray(prompt)[None]
-        logits, caches = lm.prefill(params, toks, cfg, max_len=64)
-        out = [int(jnp.argmax(logits[0, -1]))]
-        for t in range(5):
-            logits, caches = lm.decode(
-                params, jnp.asarray([[out[-1]]], jnp.int32), caches, cfg,
-                jnp.asarray(len(prompt) + t),
-            )
-            out.append(int(jnp.argmax(logits[0, 0])))
-        return out
-
-    solo_outs = [solo(p) for p in prompts]
+    solo_outs = [_solo_greedy(params, cfg, p, 6, max_len=64)
+                 for p in prompts]
 
     engine = Engine(params, cfg, slots=3, max_len=64)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
@@ -140,15 +129,25 @@ def test_engine_matches_unbatched_greedy():
 # ---------------------------------------------------------------------------
 # scheduler/worker engine: packed admission, batched sampling, paging
 # ---------------------------------------------------------------------------
-def _solo_greedy(params, cfg, prompt, n_new, max_len=96):
-    toks = jnp.asarray(prompt)[None]
-    logits, caches = lm.prefill(params, toks, cfg, max_len=max_len)
+def _solo_greedy(params, cfg, prompt, n_new, max_len=96,
+                 dtype=jnp.bfloat16):
+    """Per-request greedy oracle.  Both sides JITTED on purpose: the engine
+    prefill/decode are jitted, and eager bf16 arithmetic (e.g. ssd conv
+    states) differs by ~1 ulp from the jitted fusion — enough to flip a
+    greedy argmax a step later.  Comparing jitted vs eager is a test bug,
+    not an engine bug.  (When the engine runs a *different-shaped*
+    computation — packed prefill — jit does not give bit-identity either;
+    those tests run both sides in fp32, where shape-dependent rounding is
+    ~1e-6 instead of bf16's ~1e-2.)"""
+    pre = jax.jit(lambda t: lm.prefill(params, t, cfg, max_len=max_len,
+                                       dtype=dtype))
+    dec = jax.jit(lambda t, c, p: lm.decode(params, t, c, cfg, p,
+                                            dtype=dtype))
+    logits, caches = pre(jnp.asarray(prompt)[None])
     out = [int(jnp.argmax(logits[0, -1]))]
     for t in range(n_new - 1):
-        logits, caches = lm.decode(
-            params, jnp.asarray([[out[-1]]], jnp.int32), caches, cfg,
-            jnp.asarray(len(prompt) + t),
-        )
+        logits, caches = dec(jnp.asarray([[out[-1]]], jnp.int32), caches,
+                             jnp.asarray(len(prompt) + t))
         out.append(int(jnp.argmax(logits[0, 0])))
     return out
 
@@ -388,6 +387,94 @@ def test_paged_decode_past_max_len_clamps_like_dense():
         assert req.done and len(req.generated) == 16
         generated[name] = req.generated
     assert generated["paged"] == generated["dense"]
+
+
+# ---------------------------------------------------------------------------
+# Hybrid architectures through the same engine (SequenceMixer registry)
+# ---------------------------------------------------------------------------
+def _hybrid_cfg(arch, kind):
+    cfg = get_smoke_config(arch)
+    if kind is not None:
+        cfg = dataclasses.replace(
+            cfg, attention=dataclasses.replace(cfg.attention, kind=kind)
+        )
+    return cfg
+
+
+@pytest.mark.parametrize("arch,kind,packs", [
+    ("mamba2_1p3b", None, True),            # pure ssd
+    ("recurrentgemma_9b", None, True),      # rglru + flow slots
+    ("recurrentgemma_9b", "softmax", False),  # rglru + local rings
+])
+def test_engine_hybrid_matches_solo_greedy(arch, kind, packs):
+    """Hybrid rglru/ssd/local stacks serve end-to-end through the engine:
+    packed admission (or the capability-driven per-request fallback) must
+    generate exactly what the per-request jitted oracle generates, under
+    mixed prompt lengths."""
+    cfg = _hybrid_cfg(arch, kind)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 18, 11)]
+    # fp32 on BOTH sides: packed prefill runs different matmul shapes than
+    # the per-request oracle, and bf16's shape-dependent rounding (~1e-2)
+    # flips near-tied argmaxes of a random-init model; fp32 noise (~1e-6)
+    # keeps the parity exact without seed-tuning
+    solo = [_solo_greedy(params, cfg, p, 5, dtype=jnp.float32)
+            for p in prompts]
+
+    engine = Engine(params, cfg, slots=3, max_len=96, dtype=jnp.float32)
+    assert engine.worker.packable is packs
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    for r, s in zip(reqs, solo):
+        assert r.generated == s, (arch, kind, r.uid, r.generated, s)
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("mamba2_1p3b", None), ("recurrentgemma_9b", None),
+])
+def test_engine_hybrid_slot_churn_and_readmission(arch, kind):
+    """Mid-stream retirement/re-admission for hybrid stacks: more requests
+    than slots with heterogeneous lengths and budgets, every retirement
+    re-offering its slot; every generation must match the jitted
+    per-request oracle (not just complete)."""
+    cfg = _hybrid_cfg(arch, kind)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    lens = rng.integers(4, 24, 7)
+    buds = rng.integers(1, 6, 7)
+    reqs = [
+        Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32),
+                max_new_tokens=int(m))
+        for i, (n, m) in enumerate(zip(lens, buds))
+    ]
+    solo = [_solo_greedy(params, cfg, r.prompt, r.max_new_tokens,
+                         dtype=jnp.float32) for r in reqs]
+    engine = Engine(params, cfg, slots=2, max_len=96, dtype=jnp.float32)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert {r.uid for r in done} == {r.uid for r in reqs}
+    for r, s in zip(reqs, solo):
+        assert r.generated == s, (arch, r.uid, r.generated, s)
+
+
+def test_hybrid_packed_prefill_has_no_not_implemented_path():
+    """Regression for the pre-mixer ladders: lm.prefill(lengths=) must
+    serve rglru/ssd stacks instead of raising NotImplementedError."""
+    for arch in ("mamba2_1p3b", "recurrentgemma_9b"):
+        cfg = get_smoke_config(arch)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(14)
+        toks = rng.integers(0, cfg.vocab_size, (2, 12)).astype(np.int32)
+        lg, caches = lm.prefill(params, jnp.asarray(toks), cfg, max_len=12,
+                                lengths=jnp.asarray([7, 12]))
+        assert lg.shape[0] == 2 and len(caches) == cfg.n_layers
 
 
 def test_paged_admission_reserves_decode_budget():
