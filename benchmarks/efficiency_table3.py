@@ -101,12 +101,23 @@ def run(*, quick: bool = True, backends: tuple = ("auto",),
     # softmax/linear baselines: its rows must merge with the main sweep's
     # at the regression gate, and duplicate row names abort the merge
     if not all(b and b.startswith("cp_") for b in backends):
-        variants += [("softmax", None), ("linear", None)]
+        variants += [("softmax", None), ("linear", None), ("hybrid_ssd", None)]
     rows = {}
     for kind, backend in variants:
-        over = {"backend": backend} if backend else {}
-        cfg = with_kind(base, kind, **over)
-        name = kind if backend in (None, "auto") else f"flow[{backend}]"
+        if kind == "hybrid_ssd":
+            # mamba2-style (ssd, attn) hybrid stack: the training column
+            # exercises the ssd_chunk custom VJP end-to-end
+            from repro.config import SSDConfig
+
+            cfg = dataclasses.replace(
+                with_kind(base, "flow"), pattern=("ssd", "attn"),
+                ssd=SSDConfig(d_state=32, expand=2, head_dim=32,
+                              conv_width=4, chunk_size=32))
+            name = "hybrid_ssd"
+        else:
+            over = {"backend": backend} if backend else {}
+            cfg = with_kind(base, kind, **over)
+            name = kind if backend in (None, "auto") else f"flow[{backend}]"
         plan = None
         if backend and backend.startswith("cp_"):
             nc_only = backend == "cp_nc"

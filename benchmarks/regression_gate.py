@@ -18,7 +18,9 @@ construction: ``flow[pallas_chunk]`` from the table-3 sweep,
 
 Gated cells are the ``infer_*`` / ``train_*`` columns (steps/s, table 3)
 and ``serve_*`` columns (decode tokens/s, serving bench); derived columns
-(slowdown ratios, trends) ride along ungated.
+(slowdown ratios, trends) ride along ungated.  The kernel-family rows
+(``flow[pallas_fused]``, the ``hybrid_ssd`` training stack) gate like any
+other: a baseline cell the sweep can no longer produce fails the gate.
 
 Baselines are hardware-specific: regenerate with ``--update-baseline`` on
 the CI runner class (or locally for local gating) and commit the result.

@@ -47,12 +47,13 @@ Strategy selection
 
 * ``"auto"`` (default) — first applicable backend in preference order::
 
-      pallas_nc > pallas_chunk > fused_causal > xla_chunked > xla_cumsum
-      > pallas_decode > recurrent
+      pallas_nc > pallas_fused > pallas_chunk > fused_causal > xla_chunked
+      > xla_cumsum > pallas_decode > recurrent
 
   Each backend *self-reports* applicability from (config, static shapes,
-  platform): Pallas kernels only volunteer on TPU; ``fused_causal`` needs
-  strict-causal competition and a power-of-two-chunkable length;
+  platform): Pallas kernels only volunteer on TPU; ``pallas_fused`` and
+  ``fused_causal`` need strict-causal competition (any length — awkward N
+  is padded to a chunk multiple and masked, never shrunk to tiny chunks);
   ``xla_chunked`` needs ``N % chunk_size == 0``; ``xla_cumsum`` always
   applies.  Resolution is a pure function — same inputs, same backend.
 * ``"xla"`` / ``"pallas"`` — legacy families: auto restricted to non-Pallas /

@@ -11,8 +11,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.attention.fused import effective_chunk
+from repro.attention.fused import effective_chunk, padded_len
 from repro.attention.vjp import flow_chunk_dot
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -23,16 +24,30 @@ def chunked_causal_dot_pallas(
     qg: jax.Array, k: jax.Array, v: jax.Array, *, chunk: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """qg: (B, H, G, N, D); k: (B, H, N, D); v: (B, H, N, Dv)."""
+    """qg: (B, H, G, N, D); k: (B, H, N, D); v: (B, H, N, Dv).
+
+    Non-chunk-multiple N is zero-padded to the next chunk multiple and the
+    result sliced back — zero k/v rows contribute nothing to the causal
+    aggregation, so no masking is needed inside the kernel.
+    """
     interp = _INTERPRET if interpret is None else interpret
     b, h, g, n, d = qg.shape
     dv = v.shape[-1]
     c = effective_chunk(n, chunk)
+    n_pad = padded_len(n, c)
+
+    def pad(x):
+        if x.shape[-2] == n_pad:
+            return x
+        width = [(0, 0)] * x.ndim
+        width[-2] = (0, n_pad - x.shape[-2])
+        return jnp.pad(x, width)
+
     out = flow_chunk_dot(
-        qg.reshape(b * h, g, n, d),
-        k.reshape(b * h, n, d),
-        v.reshape(b * h, n, dv),
+        pad(qg.reshape(b * h, g, n, d)),
+        pad(k.reshape(b * h, n, d)),
+        pad(v.reshape(b * h, n, dv)),
         c,
         interp,
     )
-    return out.reshape(b, h, g, n, dv)
+    return out[:, :, :n].reshape(b, h, g, n, dv)

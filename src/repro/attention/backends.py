@@ -2,8 +2,8 @@
 
 Registration order IS the ``backend="auto"`` preference order:
 
-    pallas_nc  > pallas_chunk  > fused_causal  > xla_chunked  > xla_cumsum
-    > pallas_decode > recurrent > cp_nc > cp_causal
+    pallas_nc > pallas_fused > pallas_chunk > fused_causal > xla_chunked
+    > xla_cumsum > pallas_decode > recurrent > cp_nc > cp_causal
 
 (the ``cp_*`` context-parallel glue backends are ``shard_only``: they are
 candidates only when resolution carries a ``ShardSpec`` — where every
@@ -148,8 +148,6 @@ class PallasChunk(Backend):
             return False, why
         if not cfg.chunk_size or cfg.chunk_size <= 0:
             return False, "chunk_size <= 0"
-        if fused.effective_chunk(shapes.n, cfg.chunk_size) < 2:
-            return False, f"N={shapes.n} has no usable power-of-two chunk"
         if platform != "tpu" and not explicit:
             return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
         return True, "pallas kernel"
@@ -200,12 +198,15 @@ class PallasNC(Backend):
         return flow_attention_nc_pallas(q, k, v, cfg)
 
 
-class FusedCausal(Backend):
-    """Strict-causal flows + cumulative softmax + aggregation in ONE scan —
-    the O(d^2) FlowState is the carry, so prefill hands decode its state for
-    free and no (B,H,N) intermediate ever round-trips HBM."""
+class PallasFused(Backend):
+    """The whole strict-causal pipeline in one Pallas kernel
+    (``kernels/flow_fused``): flows, conservation, cumulative competition
+    and aggregation per grid step, FlowState carried in VMEM scratch.  One
+    read of q/k/v, one write of out — and the reverse-scan backward kernel
+    saves no (B,H,N)-sized residuals.  Packed prefill masks each row past
+    its length so the final carry IS the boundary FlowState (no gathers)."""
 
-    provides = frozenset({"forward", "prefill"})
+    provides = frozenset({"forward", "prefill", "prefill_packed"})
     differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
@@ -218,8 +219,43 @@ class FusedCausal(Backend):
             return False, "fused carry includes the competition normalizer"
         if not cfg.chunk_size or cfg.chunk_size <= 0:
             return False, "chunk_size <= 0"
-        if fused.effective_chunk(shapes.n, cfg.chunk_size) < 2:
-            return False, f"N={shapes.n} has no usable power-of-two chunk"
+        if platform != "tpu" and not explicit:
+            return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
+        return True, "fused strict-causal pallas kernel"
+
+    def forward(self, q, k, v, cfg):
+        from repro.kernels.flow_fused import flow_fused_forward
+
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        out, _ = flow_fused_forward(q, k, v, cfg)
+        return out
+
+    def prefill(self, q, k, v, cfg, *, lengths=None):
+        from repro.kernels.flow_fused import flow_fused_forward
+
+        k, v = pipeline.expand_kv(q, k, v, cfg)
+        return flow_fused_forward(q, k, v, cfg, return_state=True,
+                                  lengths=lengths)
+
+
+class FusedCausal(Backend):
+    """Strict-causal flows + cumulative softmax + aggregation in ONE scan —
+    the O(d^2) FlowState is the carry, so prefill hands decode its state for
+    free and no (B,H,N) intermediate ever round-trips HBM."""
+
+    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    differentiable = frozenset({"forward", "prefill", "prefill_packed"})
+
+    def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
+        why = _check_causal_self(cfg, shapes)
+        if why:
+            return False, why
+        if not cfg.strict_causal:
+            return False, "implements the strict-causal cumulative competition only"
+        if not cfg.use_competition:
+            return False, "fused carry includes the competition normalizer"
+        if not cfg.chunk_size or cfg.chunk_size <= 0:
+            return False, "chunk_size <= 0"
         return True, "fused strict-causal scan"
 
     def forward(self, q, k, v, cfg):
@@ -227,9 +263,9 @@ class FusedCausal(Backend):
         return fused.fused_causal_forward(q, k, v, cfg)
 
     def prefill(self, q, k, v, cfg, *, lengths=None):
-        assert lengths is None, "fused scan returns the final state only"
         k, v = pipeline.expand_kv(q, k, v, cfg)
-        return fused.fused_causal_forward(q, k, v, cfg, return_state=True)
+        return fused.fused_causal_forward(q, k, v, cfg, return_state=True,
+                                          lengths=lengths)
 
 
 class Recurrent(Backend):
@@ -290,6 +326,7 @@ class PallasDecode(Backend):
 
 register_backend("pallas_nc", PallasNC())
 register_backend("pallas_chunk", PallasChunk())
+register_backend("pallas_fused", PallasFused(), before="pallas_chunk")
 register_backend("fused_causal", FusedCausal())
 register_backend("xla_chunked", XlaChunked())
 register_backend("xla_cumsum", XlaCumsum())

@@ -37,11 +37,24 @@ Array = jax.Array
 
 
 def effective_chunk(n: int, chunk_size: int) -> int:
-    """Largest power-of-two shrink of ``chunk_size`` that divides ``n``."""
-    c = max(1, min(chunk_size, n))
-    while n % c:
-        c //= 2
-    return c
+    """Chunk size actually used for a length-``n`` sequence: ``chunk_size``
+    capped at ``n``.  Non-multiple lengths are handled by padding to the
+    next chunk multiple and masking the tail (see ``padded_len``) — the old
+    power-of-two shrink degraded to one-token chunks for odd/prime N."""
+    return max(1, min(chunk_size, n))
+
+
+def padded_len(n: int, chunk: int) -> int:
+    """``n`` rounded up to the next multiple of ``chunk``."""
+    return -(-n // chunk) * chunk
+
+
+def _pad_seq(x: Array, n_pad: int, axis: int) -> Array:
+    if x.shape[axis] == n_pad:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n_pad - x.shape[axis])
+    return jnp.pad(x, pad)
 
 
 def fused_causal_forward(
@@ -51,6 +64,7 @@ def fused_causal_forward(
     cfg: FlowConfig,
     *,
     return_state: bool = False,
+    lengths: Array | None = None,
 ):
     """Strict-causal Flow-Attention in one fused chunked scan.
 
@@ -59,6 +73,12 @@ def fused_causal_forward(
     softmax is what admits the O(d^2) carry).  GQA-expand must be applied by
     the caller (see ``pipeline.expand_kv``); this function implements shared
     semantics over whatever kv heads it is given.
+
+    ``lengths`` (B,) selects packed-prefill semantics: positions past each
+    row's length contribute zero phi/e, so every running sum freezes at the
+    boundary and the final carry is that row's boundary ``FlowState`` — the
+    same masking that makes non-chunk-multiple N a pad-and-mask, not a
+    degenerate-chunk, problem.
     """
     assert cfg.strict_causal and cfg.use_competition, (
         "fused path implements the strict-causal cumulative competition"
@@ -70,27 +90,40 @@ def fused_causal_forward(
     dv = v.shape[-1]
     assert k.shape[2] == n, "causal flow attention requires N == M"
 
-    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
-    vf = v.astype(jnp.float32)
-
-    qg = _group(phi_q, hkv)  # (B,Hkv,G,N,D)
-    g = qg.shape[2]
-
     c = effective_chunk(n, cfg.chunk_size)
-    nc = n // c
+    n_pad = padded_len(n, c)
+    nc = n_pad // c
+
+    if lengths is None:
+        t = jnp.full((b,), n, jnp.int32)
+    else:
+        t = jnp.clip(lengths.astype(jnp.int32), 1, n)
+    # (B, n_pad) validity: padding tail and packed positions both masked
+    row_ok = (
+        jnp.arange(n_pad, dtype=jnp.int32)[None, :] < t[:, None]
+    ).astype(jnp.float32)
+
+    phi_q = phi_map(_pad_seq(q, n_pad, 2).astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(_pad_seq(k, n_pad, 2).astype(jnp.float32), cfg.phi)
+    phi_q = phi_q * row_ok[:, None, :, None]
+    phi_k = phi_k * row_ok[:, None, :, None]
+    vf = _pad_seq(v, n_pad, 2).astype(jnp.float32)
+
+    qg = _group(phi_q, hkv)  # (B,Hkv,G,n_pad,D)
+    g = qg.shape[2]
 
     # chunk the sequence axis and lead with it for the scan
     qs = jnp.moveaxis(qg.reshape(b, hkv, g, nc, c, d), 3, 0)  # (nc,B,H,G,c,d)
     ks = jnp.moveaxis(phi_k.reshape(b, hkv, nc, c, d), 2, 0)  # (nc,B,H,c,d)
     vs = jnp.moveaxis(vf.reshape(b, hkv, nc, c, dv), 2, 0)  # (nc,B,H,c,dv)
     # 1-based global positions per chunk: (nc, c)
-    pos = (jnp.arange(n, dtype=jnp.float32) + 1.0).reshape(nc, c)
+    pos = (jnp.arange(n_pad, dtype=jnp.float32) + 1.0).reshape(nc, c)
+    oks = jnp.moveaxis(row_ok.reshape(b, nc, c), 1, 0)  # (nc, B, c)
 
     mask = jnp.tril(jnp.ones((c, c), jnp.float32))
     f32 = jnp.float32
     carry0 = FlowState(
-        t=jnp.full((b,), n, jnp.int32),  # static; only sums/z/s evolve
+        t=t,  # static; only sums/z/s evolve
         q_sum=jnp.zeros((b, hkv, d), f32),
         k_sum=jnp.zeros((b, hkv, d), f32),
         ko_sum=jnp.zeros((b, hkv, d), f32),
@@ -100,7 +133,7 @@ def fused_causal_forward(
     )
 
     def step(st: FlowState, xs):
-        qc, kc, vc, p = xs  # (B,H,G,c,d), (B,H,c,d), (B,H,c,dv), (c,)
+        qc, kc, vc, p, ok = xs  # (B,H,G,c,d), (B,H,c,d), (B,H,c,dv), (c,), (B,c)
         normal_k = p  # sources seen up to position i
         normal_q = p * g  # sinks seen (G per position)
 
@@ -135,7 +168,8 @@ def fused_causal_forward(
             alloc = jax.nn.sigmoid(cons_sink)
         else:
             alloc = jnp.ones_like(cons_sink)
-        e = jnp.exp(cons_src)  # in [1/e, e]: no running-max needed
+        # e masked past each row's boundary so z freezes with the sums
+        e = jnp.exp(cons_src) * ok[:, None, :]  # in [1/e, e] while valid
         z = st.z[:, :, None] + jnp.cumsum(e, axis=2)  # (B,H,c)
         v_w = vc * e[..., None]
 
@@ -167,8 +201,9 @@ def fused_causal_forward(
         )
         return new, out.astype(out_dtype)
 
-    state, outs = jax.lax.scan(step, carry0, (qs, ks, vs, pos))
-    out = _ungroup(jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, n, dv))
+    state, outs = jax.lax.scan(step, carry0, (qs, ks, vs, pos, oks))
+    out = _ungroup(jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, n_pad, dv))
+    out = out[:, :, :n]
     if return_state:
         return out, state
     return out

@@ -24,6 +24,17 @@ flow_nc (fused non-causal sink side): one backward kernel
 reduces the key-side cotangents (dk_sum / dko_sum / dkv) across the
 sequential N-block grid axis.
 
+flow_fused (whole strict-causal pipeline, ``kernels/flow_fused/``): the
+backward is a reverse chunked scan that reconstructs each chunk's carry-in
+from the final totals (totals - suffix - own increment) and pulls the
+cotangents through ``jax.vjp`` of the forward's own chunk step — residuals
+are the inputs plus the O(d^2) boundary FlowState, nothing (B, H, N)-sized.
+
+flow_nc_fused (single-launch non-causal pair): forward is the phased
+``kernels/flow_nc/fused.py`` kernel; the backward differentiates the
+decomposed key-side math in XLA and reuses the ``flow_nc_qside`` Pallas
+backward for the dominant sink-side stream.
+
 Gradient capability is *declared* per backend (``Backend.differentiable``)
 and enforced by ``registry.resolve(..., needs_grad=True)`` — the registry
 no longer needs any training special-case because every built-in backend
@@ -37,10 +48,15 @@ import functools
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.kernels.flow_chunk.bwd import flow_chunk_dkv_call
 from repro.kernels.flow_chunk.flow_chunk import flow_chunk_call
+from repro.kernels.flow_fused.bwd import flow_fused_bwd_call
+from repro.kernels.flow_fused.flow_fused import flow_fused_call
 from repro.kernels.flow_nc.bwd import flow_nc_qside_bwd_call
 from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
+from repro.kernels.flow_nc.fused import flow_nc_fused_call
 
 Array = jax.Array
 
@@ -77,6 +93,52 @@ flow_chunk_dot.defvjp(_flow_chunk_fwd, _flow_chunk_bwd)
 
 
 # ---------------------------------------------------------------------------
+# flow_fused: the whole strict-causal pipeline in one kernel
+# ---------------------------------------------------------------------------
+def _fused_lens(q, n_valid):
+    return jnp.full((q.shape[0],), n_valid, jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flow_fused_dot(q: Array, k: Array, v: Array, n_valid: int, chunk: int,
+                   eps: float, phi: str, use_alloc: bool, interpret: bool):
+    """Differentiable ``flow_fused_call`` for dense (unpacked) batches.
+
+    q: (BH, G, N, D) raw; k: (BH, N, D); v: (BH, N, Dv); N % chunk == 0
+    with positions >= ``n_valid`` being chunk padding (masked inside the
+    kernel, zero grads).  Returns (out, (q_sum, k_sum, ko_sum, qi_sum, z,
+    s)) — the FlowState sums are differentiable outputs so prefill
+    hand-off losses can flow through them.
+    """
+    return flow_fused_call(q, k, v, _fused_lens(q, n_valid), chunk=chunk,
+                           eps=eps, phi=phi, use_alloc=use_alloc,
+                           interpret=interpret)
+
+
+def _flow_fused_fwd(q, k, v, n_valid, chunk, eps, phi, use_alloc,
+                    interpret):
+    out, sums = flow_fused_call(q, k, v, _fused_lens(q, n_valid),
+                                chunk=chunk, eps=eps, phi=phi,
+                                use_alloc=use_alloc, interpret=interpret)
+    return (out, sums), (q, k, v, sums)
+
+
+def _flow_fused_bwd(n_valid, chunk, eps, phi, use_alloc, interpret,
+                    residuals, g):
+    q, k, v, sums = residuals
+    g_out, g_sums = g
+    dq, dk, dv = flow_fused_bwd_call(
+        q, k, v, _fused_lens(q, n_valid), sums, g_out, g_sums,
+        chunk=chunk, eps=eps, phi=phi, use_alloc=use_alloc,
+        interpret=interpret,
+    )
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flow_fused_dot.defvjp(_flow_fused_fwd, _flow_fused_bwd)
+
+
+# ---------------------------------------------------------------------------
 # flow_nc: fused non-causal sink side
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
@@ -109,3 +171,66 @@ def _flow_nc_bwd(n_sinks, m_sources, eps, block, interpret, residuals, g):
 
 
 flow_nc_qside.defvjp(_flow_nc_fwd, _flow_nc_bwd)
+
+
+# ---------------------------------------------------------------------------
+# flow_nc_fused: the whole non-causal pair in one launch
+# ---------------------------------------------------------------------------
+def _nc_decomposed(q, k, v, eps, block, use_comp, interpret):
+    """The fused nc kernel's math, decomposed: XLA key side (cheap O(M*D)
+    reductions, natively differentiable) feeding the ``flow_nc_qside``
+    Pallas sink kernel (the dominant O(NQ*D*Dv) stream, custom VJP).  Used
+    only to *differentiate* ``flow_nc_fused`` — the primal runs the
+    single-launch kernel."""
+    nq, m = q.shape[1], k.shape[1]
+    pq = jax.nn.sigmoid(q.astype(jnp.float32))
+    pk = jax.nn.sigmoid(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    k_sum = pk.sum(axis=1)  # (BH, D)
+    q_sum = pq.sum(axis=1)
+    src_out = 1.0 / jnp.einsum("bmd,bd->bm", pk + eps, q_sum + eps)
+    ko_sum = (pk * src_out[..., None]).sum(axis=1)
+    sink_in = 1.0 / jnp.einsum("bnd,bd->bn", pq + eps, k_sum + eps)
+    qi_sum = (pq * sink_in[..., None]).sum(axis=1)
+    if use_comp:
+        cons_src = jnp.clip(
+            jnp.einsum("bmd,bd->bm", pk + eps, qi_sum + eps), -1.0, 1.0
+        )
+        comp = jax.nn.softmax(cons_src, axis=-1) * float(m)
+        v_hat = vf * comp[..., None]
+    else:
+        v_hat = vf
+    kv = jnp.einsum("bmd,bme->bde", pk, v_hat)
+    return flow_nc_qside(q, k_sum, ko_sum, kv, nq, m, eps, block, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flow_nc_fused(q: Array, k: Array, v: Array, eps: float, block: int,
+                  use_comp: bool, interpret: bool) -> Array:
+    """Differentiable single-launch non-causal Flow-Attention.
+
+    q: (BH, NQ, D) raw; k: (BH, M, D); v: (BH, M, Dv) -> (BH, NQ, Dv).
+    The trailing four arguments are static (non-differentiable).
+    """
+    return flow_nc_fused_call(q, k, v, eps=eps, block=block,
+                              use_comp=use_comp, interpret=interpret)
+
+
+def _flow_nc_fused_fwd(q, k, v, eps, block, use_comp, interpret):
+    out = flow_nc_fused_call(q, k, v, eps=eps, block=block,
+                             use_comp=use_comp, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flow_nc_fused_bwd(eps, block, use_comp, interpret, residuals, g):
+    q, k, v = residuals
+    _, pull = jax.vjp(
+        lambda q, k, v: _nc_decomposed(q, k, v, eps, block, use_comp,
+                                       interpret),
+        q, k, v,
+    )
+    dq, dk, dv = pull(g)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flow_nc_fused.defvjp(_flow_nc_fused_fwd, _flow_nc_fused_bwd)

@@ -1,0 +1,6 @@
+"""Fused strict-causal Flow-Attention Pallas kernels (paper Alg. 2)."""
+from .flow_fused import flow_fused_call
+from .ops import flow_fused_forward
+from .ref import flow_fused_ref
+
+__all__ = ["flow_fused_call", "flow_fused_forward", "flow_fused_ref"]

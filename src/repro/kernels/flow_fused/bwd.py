@@ -1,0 +1,220 @@
+"""Reverse-scan Pallas backward for the fused strict-causal kernel.
+
+The forward saves NOTHING (B, H, N)-sized: residuals are q/k/v (re-read),
+``lens``, and the six FINAL carry totals.  Walking chunks back-to-front,
+each step first reconstructs the carry that ENTERED the chunk as
+
+    carry_in = total - suffix - own_increment
+
+where ``suffix`` accumulates the increments of the chunks already visited
+(i.e. later in forward order) in VMEM scratch, and the chunk's own
+increments are recomputed in dependency order (k/q sums are carry-free;
+sink_in/src_out then unlock the ko/qi/z/s increments).  With the carry-in
+in hand, ``jax.vjp`` of the SAME ``_chunk_step`` the forward ran pulls the
+output cotangent plus the carried state cotangent back onto (carry_in,
+q, k, v) — so forward and backward can never drift apart.  The six state
+cotangents (for the FlowState outputs) seed the carried cotangent at the
+last chunk.  All reconstruction is exact up to fp32 reassociation: the
+four flow sums are sums of nonnegative phi terms, e is clip-bounded to
+[1/e, e], so the subtractions lose no significant bits at chunked scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flow_fused import _CompilerParams, _chunk_step, _phi as phi_map
+
+Array = jax.Array
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, lens_ref,
+    tq_ref, tk_ref, tko_ref, tqi_ref, tz_ref, ts_ref,
+    go_ref, gq_ref, gk_ref, gko_ref, gqi_ref, gz_ref, gs_ref,
+    dq_ref, dk_ref, dv_ref,
+    q_suf, k_suf, ko_suf, qi_suf, z_suf, s_suf,
+    dq_c, dk_c, dko_c, dqi_c, dz_c, ds_c,
+    *, nc: int, chunk: int, eps: float, phi: str, use_alloc: bool,
+    grp: int,
+):
+    r = pl.program_id(1)
+    ci = nc - 1 - r  # forward chunk index
+
+    @pl.when(r == 0)
+    def _init():
+        for ref in (q_suf, k_suf, ko_suf, qi_suf, z_suf, s_suf):
+            ref[...] = jnp.zeros_like(ref)
+        # carried state cotangent starts from the FlowState output grads
+        dq_c[...] = gq_ref[...]
+        dk_c[...] = gk_ref[...]
+        dko_c[...] = gko_ref[...]
+        dqi_c[...] = gqi_ref[...]
+        dz_c[...] = gz_ref[...]
+        ds_c[...] = gs_ref[0]
+
+    f32 = jnp.float32
+    pos = (
+        ci * chunk
+        + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        + 1
+    ).astype(f32)
+    valid = (pos <= lens_ref[...]).astype(f32)
+    ltri = jnp.tril(jnp.ones((chunk, chunk), f32))
+    normal_k = pos
+    normal_q = pos * float(grp)
+
+    def csum(x):
+        return jax.lax.dot_general(
+            ltri, x, (((1,), (0,)), ((), ())), preferred_element_type=f32
+        )
+
+    qc = q_ref[0].astype(f32)
+    kc = k_ref[0].astype(f32)
+    vc = v_ref[0].astype(f32)
+    pq = phi_map(qc, phi) * valid
+    pk = phi_map(kc, phi) * valid
+
+    # --- reconstruct the carry that entered this chunk ------------------
+    k_inc = jnp.sum(pk, axis=0, keepdims=True)  # (1, D)
+    q_inc = jnp.sum(pq.sum(axis=0), axis=0, keepdims=True)
+    k_run = tk_ref[...] - k_suf[...] - k_inc
+    q_run = tq_ref[...] - q_suf[...] - q_inc
+    k_csum = k_run + csum(pk)
+    q_csum = q_run + csum(pq.sum(axis=0))
+    sink_in = normal_k[None] / jnp.sum(
+        (pq + eps) * (k_csum[None] + eps), axis=-1, keepdims=True
+    )
+    src_out = normal_q / jnp.sum(
+        (pk + eps) * (q_csum + eps), axis=-1, keepdims=True
+    )
+    ko_inc = jnp.sum(pk * src_out, axis=0, keepdims=True)
+    qi_inc = jnp.sum(
+        (pq * sink_in).sum(axis=0), axis=0, keepdims=True
+    )
+    ko_run = tko_ref[...] - ko_suf[...] - ko_inc
+    qi_run = tqi_ref[...] - qi_suf[...] - qi_inc
+    qi_csum = qi_run + csum((pq * sink_in).sum(axis=0))
+    cons_src = jnp.clip(
+        jnp.sum((pk + eps) * (qi_csum + eps), axis=-1, keepdims=True)
+        / normal_k,
+        -1.0,
+        1.0,
+    )
+    e = jnp.exp(cons_src) * valid
+    z_inc = jnp.sum(e, axis=0, keepdims=True)  # (1, 1)
+    z_run = tz_ref[...] - z_suf[...] - z_inc
+    s_inc = jax.lax.dot_general(
+        pk, vc * e, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    s_run = ts_ref[0] - s_suf[...] - s_inc
+
+    # suffix now absorbs this chunk for the next (earlier) reverse step
+    q_suf[...] += q_inc
+    k_suf[...] += k_inc
+    ko_suf[...] += ko_inc
+    qi_suf[...] += qi_inc
+    z_suf[...] += z_inc
+    s_suf[...] += s_inc
+
+    # --- pull cotangents through the forward chunk step -----------------
+    runs_in = (q_run, k_run, ko_run, qi_run, z_run, s_run)
+
+    def step(runs, qx, kx, vx):
+        return _chunk_step(
+            runs, qx, kx, vx, pos=pos, valid=valid, ltri=ltri, eps=eps,
+            phi=phi, use_alloc=use_alloc, grp=grp,
+        )
+
+    _, pull = jax.vjp(step, runs_in, qc, kc, vc)
+    d_carry = (dq_c[...], dk_c[...], dko_c[...], dqi_c[...], dz_c[...],
+               ds_c[...])
+    d_runs_in, dq, dk, dv = pull((d_carry, go_ref[0].astype(f32)))
+
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+    dq_c[...] = d_runs_in[0]
+    dk_c[...] = d_runs_in[1]
+    dko_c[...] = d_runs_in[2]
+    dqi_c[...] = d_runs_in[3]
+    dz_c[...] = d_runs_in[4]
+    ds_c[...] = d_runs_in[5]
+
+
+def flow_fused_bwd_call(
+    q: Array, k: Array, v: Array, lens: Array, totals, g_out: Array,
+    g_sums, *, chunk: int = 128, eps: float = 1e-6, phi: str = "sigmoid",
+    use_alloc: bool = True, interpret: bool = False,
+):
+    """Gradients of ``flow_fused_call`` w.r.t. (q, k, v).
+
+    ``totals``/``g_sums`` are the six forward state outputs and their
+    cotangents, each (BH, D) / (BH, 1) / (BH, D, Dv) f32.  Returns
+    (dq, dk, dv) with the primal dtypes.
+    """
+    bh, grp, n, d = q.shape
+    dv_dim = v.shape[-1]
+    assert n % chunk == 0, (n, chunk)
+    nc = n // chunk
+    lens_f = lens.astype(jnp.float32).reshape(bh, 1)
+
+    def rev_g(b, r):
+        return (b, 0, nc - 1 - r, 0)
+
+    def rev(b, r):
+        return (b, nc - 1 - r, 0)
+
+    def fixed(b, r):
+        return (b, 0)
+
+    sum_spec = pl.BlockSpec((1, d), fixed)
+    s_spec = pl.BlockSpec((1, d, dv_dim), lambda b, r: (b, 0, 0))
+    z_spec = pl.BlockSpec((1, 1), fixed)
+    outs = pl.pallas_call(
+        functools.partial(_bwd_kernel, nc=nc, chunk=chunk, eps=eps,
+                          phi=phi, use_alloc=use_alloc, grp=grp),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, grp, chunk, d), rev_g),
+            pl.BlockSpec((1, chunk, d), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+            z_spec,
+            sum_spec, sum_spec, sum_spec, sum_spec, z_spec, s_spec,
+            pl.BlockSpec((1, grp, chunk, dv_dim), rev_g),
+            sum_spec, sum_spec, sum_spec, sum_spec, z_spec, s_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, grp, chunk, d), rev_g),
+            pl.BlockSpec((1, chunk, d), rev),
+            pl.BlockSpec((1, chunk, dv_dim), rev),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((d, dv_dim), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((d, dv_dim), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(q, k, v, lens_f, *totals, g_out, *g_sums)
+    return outs

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the fused strict-causal kernel (full-length cumsums).
+
+Mirrors ``attention/fused.py``'s math at flat (BH, G, N, D) shapes with the
+same phi/e masking the kernel uses, so parity tests cover both the output
+and the boundary FlowState sums (frozen at each row's length).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flow_fused import _phi as phi_map
+
+
+def flow_fused_ref(q, k, v, lens, *, eps: float = 1e-6,
+                   phi: str = "sigmoid", use_alloc: bool = True):
+    """q: (BH, G, N, D) raw; k: (BH, N, D); v: (BH, N, Dv); lens: (BH,).
+
+    Returns (out (BH, G, N, Dv), (q_sum, k_sum, ko_sum, qi_sum) each
+    (BH, D), z (BH, 1), s (BH, D, Dv)) matching ``flow_fused_call``.
+    """
+    bh, grp, n, d = q.shape
+    f32 = jnp.float32
+    pos = jnp.arange(1, n + 1, dtype=f32)[None, :]  # (1, N)
+    valid = (pos <= lens.astype(f32)[:, None]).astype(f32)  # (BH, N)
+    pq = phi_map(q.astype(f32), phi) * valid[:, None, :, None]  # (BH,G,N,D)
+    pk = phi_map(k.astype(f32), phi) * valid[:, :, None]  # (BH,N,D)
+    vf = v.astype(f32)
+    normal_k = pos  # (1, N)
+    normal_q = pos * float(grp)
+
+    k_csum = jnp.cumsum(pk, axis=1)  # (BH,N,D)
+    q_csum = jnp.cumsum(pq.sum(axis=1), axis=1)  # (BH,N,D)
+    sink_in = normal_k[:, None] / jnp.einsum(
+        "bgnd,bnd->bgn", pq + eps, k_csum + eps
+    )  # (BH,G,N)
+    src_out = normal_q / jnp.einsum("bnd,bnd->bn", pk + eps, q_csum + eps)
+
+    ko_csum = jnp.cumsum(pk * src_out[..., None], axis=1)
+    cons_sink = jnp.einsum("bgnd,bnd->bgn", pq + eps, ko_csum + eps) \
+        / normal_q[:, None]
+    qi_csum = jnp.cumsum((pq * sink_in[..., None]).sum(axis=1), axis=1)
+    cons_src = jnp.clip(
+        jnp.einsum("bnd,bnd->bn", pk + eps, qi_csum + eps) / normal_k,
+        -1.0, 1.0,
+    )
+
+    alloc = jax.nn.sigmoid(cons_sink) if use_alloc \
+        else jnp.ones_like(cons_sink)
+    e = jnp.exp(cons_src) * valid  # (BH,N)
+    z = jnp.cumsum(e, axis=1)
+    v_w = vf * e[..., None]
+
+    q_in = pq * sink_in[..., None]
+    scores = jnp.einsum("bgnd,bmd->bgnm", q_in, pk)
+    mask = jnp.tril(jnp.ones((n, n), f32))
+    agg = jnp.einsum("bgnm,bme->bgne", scores * mask, v_w)
+    out = agg * (normal_k / z)[:, None, :, None] * alloc[..., None]
+
+    s = jnp.einsum("bnd,bne->bde", pk, v_w)
+    sums = (q_csum[:, -1], k_csum[:, -1], ko_csum[:, -1], qi_csum[:, -1],
+            z[:, -1:], s)
+    return out.astype(q.dtype), sums

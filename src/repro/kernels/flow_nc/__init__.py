@@ -1,4 +1,6 @@
+from repro.kernels.flow_nc.fused import flow_nc_fused_call
 from repro.kernels.flow_nc.ops import flow_attention_nc_pallas
 from repro.kernels.flow_nc.ref import flow_nc_qside_ref
 
-__all__ = ["flow_attention_nc_pallas", "flow_nc_qside_ref"]
+__all__ = ["flow_attention_nc_pallas", "flow_nc_fused_call",
+           "flow_nc_qside_ref"]

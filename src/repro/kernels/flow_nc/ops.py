@@ -1,21 +1,24 @@
-"""Jit'd wrapper: full fused non-causal Flow-Attention built on the Pallas
-sink-side kernel.  The key-side reductions are O(m*d) bandwidth-bound vector
-ops (left to XLA); the sink side — the dominant O(n*d*dv) stream — runs in
-the fused kernel.  Matches ``repro.core.flow_attention.flow_attention_nc``
-(shared-GQA semantics) and is tested against it.
+"""Jit'd wrapper: full fused non-causal Flow-Attention in ONE Pallas launch.
 
-The sink side routes through the ``attention/vjp.py`` custom-VJP rule, and
-the key side is plain (differentiable) XLA, so ``jax.grad`` flows through
-the whole op — q collects cotangents from both paths automatically.
+The whole pair — key-side reductions, competition reweighting, the (D, Dv)
+``kv`` matmul and the sink side — runs as the phased single-kernel
+``fused.py`` grid: one read of q and one of k/v, no XLA round-trips for the
+intermediate reductions.  Matches
+``repro.core.flow_attention.flow_attention_nc`` (shared-GQA semantics) and
+is tested against it.
+
+The op routes through the ``attention/vjp.py`` ``flow_nc_fused`` custom-VJP
+rule: the backward differentiates the decomposed key-side math in XLA while
+the dominant sink-side stream still pulls through the ``flow_nc_qside``
+Pallas backward kernel.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.flow_attention import FlowConfig, _group, phi_map
+from repro.core.flow_attention import FlowConfig, _group
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -27,47 +30,23 @@ def flow_attention_nc_pallas(
 ) -> jax.Array:
     """q: (B,Hq,N,D); k,v: (B,Hkv,M,*) -> (B,Hq,N,Dv)."""
     interp = _INTERPRET if interpret is None else interpret
-    eps = cfg.eps
     b, hq, n, d = q.shape
     hkv, m = k.shape[1], k.shape[2]
     g = hq // hkv
     dv = v.shape[-1]
-
-    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
-    vf = v.astype(jnp.float32)
     qg = _group(q, hkv)  # raw q; phi applied inside the kernel
 
-    # ---- key side (tiny reductions + one matmul, plain XLA) ----
-    k_sum = phi_k.sum(axis=2)  # (B,Hkv,D)
-    phi_qg = phi_map(qg.astype(jnp.float32), cfg.phi)
-    q_sum = phi_qg.sum(axis=(2, 3))
-    src_out = 1.0 / jnp.einsum("bhmd,bhd->bhm", phi_k + eps, q_sum + eps)
-    ko_sum = (phi_k * src_out[..., None]).sum(axis=2)
-    sink_in = 1.0 / jnp.einsum("bhgnd,bhd->bhgn", phi_qg + eps, k_sum + eps)
-    qi_sum = (phi_qg * sink_in[..., None]).sum(axis=(2, 3))
-    cons_src = jnp.clip(
-        jnp.einsum("bhmd,bhd->bhm", phi_k + eps, qi_sum + eps), -1.0, 1.0
-    )
-    if cfg.use_competition:
-        comp = jax.nn.softmax(cons_src, axis=-1) * float(m)
-        v_hat = vf * comp[..., None]
-    else:
-        v_hat = vf
-    kv = jnp.einsum("bhmd,bhme->bhde", phi_k, v_hat)  # (B,Hkv,D,Dv)
+    # lazy import keeps the kernels package importable without a cycle
+    # through repro.attention
+    from repro.attention.vjp import flow_nc_fused
 
-    # ---- sink side: fused Pallas kernel (custom VJP; lazy import keeps the
-    # kernels package importable without a cycle through repro.attention) ----
-    from repro.attention.vjp import flow_nc_qside
-
-    out = flow_nc_qside(
+    out = flow_nc_fused(
         qg.reshape(b * hkv, g * n, d),
-        k_sum.reshape(b * hkv, d),
-        ko_sum.reshape(b * hkv, d),
-        kv.reshape(b * hkv, d, dv),
-        g * n,
-        m,
-        eps,
+        k.reshape(b * hkv, m, d),
+        v.reshape(b * hkv, m, dv),
+        cfg.eps,
         256,
+        cfg.use_competition,
         interp,
     )
     return out.reshape(b, hkv, g, n, dv).reshape(b, hq, n, dv)

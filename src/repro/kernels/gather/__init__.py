@@ -1,0 +1,4 @@
+from repro.kernels.gather.boundary import boundary_gather
+from repro.kernels.gather.paged import paged_gather
+
+__all__ = ["boundary_gather", "paged_gather"]

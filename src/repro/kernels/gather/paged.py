@@ -1,0 +1,77 @@
+"""Pallas page-table gather for the paged-KV serving hot path.
+
+``layers/attention.py`` decode used to materialize the logical per-slot
+cache with an XLA gather ``kc[page_table]`` followed by a transpose +
+reshape — three HBM round-trips over the whole gathered cache per decode
+step.  Here the page table rides the grid as a scalar-prefetch operand:
+block ``(b, j)`` of the output is fetched straight from pool page
+``table[b, j]``, already laid out as the (B, Hkv, MP*page, D) sequence
+the attention kernel wants.  One pass, no transpose.
+
+Sentinel page ids (== num_pages) clip into an arbitrary real page, same
+as the XLA gather's clamp; callers mask the tail via ``kv_len``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _kernel(tbl_ref, k_ref, v_ref, ko_ref, vo_ref):
+    del tbl_ref  # only consumed by the index maps
+    ko_ref[...] = k_ref[...]
+    vo_ref[...] = v_ref[...]
+
+
+def paged_gather(kc: Array, vc: Array, table: Array, *,
+                 interpret: bool | None = None) -> tuple[Array, Array]:
+    """Gather pool pages into per-slot sequences.
+
+    kc/vc: (P, Hkv, page, D|Dv) pools; table: (B, MP) int32 page ids.
+    Returns (kg, vg) shaped (B, Hkv, MP*page, D|Dv)."""
+    p, hkv, page, d = kc.shape
+    dv = vc.shape[-1]
+    b, mp = table.shape
+
+    if interpret is None and _INTERPRET:
+        # off-TPU serving stays on the plain XLA gather (same clamped
+        # semantics); tests opt into the kernel with ``interpret=True``
+        def flat(pool, dd):
+            g = pool[jnp.clip(table, 0, p - 1)]  # (B, MP, Hkv, page, dd)
+            return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, mp * page, dd)
+        return flat(kc, d), flat(vc, dv)
+    interp = bool(interpret)
+
+    def src(b_, j, tbl):
+        return (jnp.clip(tbl[b_, j], 0, p - 1), 0, 0, 0)
+
+    def dst(b_, j, tbl):
+        return (b_, 0, j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, hkv, page, d), src),
+            pl.BlockSpec((1, hkv, page, dv), src),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hkv, page, d), dst),
+            pl.BlockSpec((1, hkv, page, dv), dst),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, mp * page, d), kc.dtype),
+            jax.ShapeDtypeStruct((b, hkv, mp * page, dv), vc.dtype),
+        ],
+        interpret=interp,
+    )(table.astype(jnp.int32), kc, vc)

@@ -29,6 +29,41 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 Array = jax.Array
 
 
+def _ssd_step(h, x, dt, bm, cm, *, chunk: int):
+    """One SSD chunk, pure jnp: (h_in (P,S), x (C,P), dt (C,1), bm/cm
+    (C,S)) -> (h_out, y (C,P)).  Shared verbatim by the forward kernel and
+    the ``jax.vjp`` pull inside the backward kernel (``bwd.py``), so the
+    two passes can never drift apart.  The in-chunk cumsum is a tril
+    matmul — ``jnp.cumsum`` has no in-kernel transpose rule."""
+    f32 = jnp.float32
+    ltri = jnp.tril(jnp.ones((chunk, chunk), f32))
+    cum = jax.lax.dot_general(
+        ltri, dt, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )  # (C, 1) inclusive log decay
+    diff = cum - cum.T  # (C, C): cum_i - cum_j (<= 0 on the valid triangle)
+    # clamp BEFORE exp: masked upper-triangle entries are large-positive and
+    # exp() of them is inf — inf * 0 would poison the result with NaNs
+    decay = jnp.exp(jnp.minimum(diff, 0.0)) * ltri
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )  # (C, C) = C_i . B_j
+    # x arrives pre-scaled by dt (ops.py): xdt_j = softplus(dt_j) * x_j
+    intra = jax.lax.dot_general(
+        scores * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=f32,
+    )  # (C, P)
+    inter = jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    ) * jnp.exp(cum)  # (C, P) — state is (P, S)
+    y = intra + inter
+
+    seg = jnp.exp(cum[-1:] - cum)  # (C, 1) decay from j to chunk end
+    h_new = h * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x * seg, bm, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )  # (P, S)
+    return h_new, y
+
+
 def _kernel(x_ref, dt_ref, b_ref, c_ref, o_ref, state_ref, *, chunk: int):
     ci = pl.program_id(1)
 
@@ -36,61 +71,81 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, o_ref, state_ref, *, chunk: int):
     def _init():
         state_ref[...] = jnp.zeros_like(state_ref)
 
-    x = x_ref[0].astype(jnp.float32)  # (C, P)
-    dt = dt_ref[0].astype(jnp.float32)  # (C, 1) — dt * A (negative)
-    bm = b_ref[0].astype(jnp.float32)  # (C, N)
-    cm = c_ref[0].astype(jnp.float32)  # (C, N)
+    h_new, y = _ssd_step(
+        state_ref[...],
+        x_ref[0].astype(jnp.float32),
+        dt_ref[0].astype(jnp.float32),
+        b_ref[0].astype(jnp.float32),
+        c_ref[0].astype(jnp.float32),
+        chunk=chunk,
+    )
+    o_ref[0] = y.astype(o_ref.dtype)
+    state_ref[...] = h_new
 
-    cum = jnp.cumsum(dt, axis=0)  # (C, 1) inclusive log decay
-    diff = cum - cum.T  # (C, C): cum_i - cum_j (<= 0 on the valid triangle)
-    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
-    # clamp BEFORE exp: masked upper-triangle entries are large-positive and
-    # exp() of them is inf — inf * 0 would poison the result with NaNs
-    decay = jnp.exp(jnp.minimum(diff, 0.0)) * mask
-    scores = jax.lax.dot_general(
-        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (C, C) = C_i . B_j
-    # x arrives pre-scaled by dt (ops.py): xdt_j = softplus(dt_j) * x_j
-    intra = jax.lax.dot_general(
-        scores * decay, x, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (C, P)
-    inter = jax.lax.dot_general(
-        cm, state_ref[...], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ) * jnp.exp(cum)  # (C, P) — state is (P, N)
-    o_ref[0] = (intra + inter).astype(o_ref.dtype)
 
-    seg = jnp.exp(cum[-1:] - cum)  # (C, 1) decay from j to chunk end
-    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
-        x * seg, bm, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (P, N)
+def _kernel_hins(x_ref, dt_ref, b_ref, c_ref, o_ref, hins_ref, state_ref,
+                 *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    # record the carry ENTERING this chunk — the backward kernel's boundary
+    # residual (suffix reconstruction a la flow_fused is impossible here:
+    # dividing exp(-50)-decayed totals back out is catastrophic)
+    hins_ref[0, 0] = state_ref[...]
+    h_new, y = _ssd_step(
+        state_ref[...],
+        x_ref[0].astype(jnp.float32),
+        dt_ref[0].astype(jnp.float32),
+        b_ref[0].astype(jnp.float32),
+        c_ref[0].astype(jnp.float32),
+        chunk=chunk,
+    )
+    o_ref[0] = y.astype(o_ref.dtype)
+    state_ref[...] = h_new
 
 
 def ssd_chunk_call(
     x: Array, dta: Array, b: Array, c: Array, *, chunk: int = 128,
-    interpret: bool = False,
-) -> Array:
+    interpret: bool = False, return_hins: bool = False,
+):
     """x: (BH, N, P) pre-scaled by dt; dta: (BH, N, 1) = dt*A (log decays);
-    b, c: (BH, N, S).  Returns y: (BH, N, P)."""
+    b, c: (BH, N, S).  Returns y: (BH, N, P); with ``return_hins`` also the
+    (BH, n_chunks, P, S) carry-in states (training-path residuals)."""
     bh, n, p = x.shape
     s = b.shape[-1]
     assert n % chunk == 0, (n, chunk)
-    return pl.pallas_call(
-        functools.partial(_kernel, chunk=chunk),
-        grid=(bh, n // chunk),
-        in_specs=[
-            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, p), x.dtype),
-        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+    nc = n // chunk
+    in_specs = [
+        pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((1, chunk, s), lambda i, j: (i, j, 0)),
+    ]
+    y_spec = pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0))
+    y_shape = jax.ShapeDtypeStruct((bh, n, p), x.dtype)
+    common = dict(
+        grid=(bh, nc),
+        in_specs=in_specs,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
+    )
+    if not return_hins:
+        return pl.pallas_call(
+            functools.partial(_kernel, chunk=chunk),
+            out_specs=y_spec,
+            out_shape=y_shape,
+            scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+            **common,
+        )(x, dta, b, c)
+    return pl.pallas_call(
+        functools.partial(_kernel_hins, chunk=chunk),
+        out_specs=[y_spec, pl.BlockSpec((1, 1, p, s), lambda i, j: (i, j, 0, 0))],
+        out_shape=[y_shape, jax.ShapeDtypeStruct((bh, nc, p, s), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        **common,
     )(x, dta, b, c)

@@ -66,8 +66,9 @@ def check_flow_trainable(cfg: ModelConfig, shape: ShapeSpec, xplan=None):
     reasons instead of failing deep inside ``jax.grad`` tracing:
 
     * every layer *kind* must be a differentiable mixer on this platform
-      (``resolve_mixers`` with a ``needs_grad`` plan — e.g. the ssd_chunk
-      Pallas kernel is forward-only on TPU and rejects by name);
+      (``resolve_mixers`` with a ``needs_grad`` plan — every stock mixer
+      now trains on TPU since the ssd_chunk backward landed, but custom
+      mixers still reject by name here);
     * a pinned forward-only flow *backend* raises with every attention
       backend's own rejection reason.
     """

@@ -479,12 +479,12 @@ def _paged_decode(params, q, k, v, cache: PagedKVCache, cfg: ModelConfig,
     kc = cache.k.at[pid, :, off].set(k[:, :, 0].astype(cache.k.dtype))
     vc = cache.v.at[pid, :, off].set(v[:, :, 0].astype(cache.v.dtype))
     # logical per-slot cache = its pages in table order; sentinel gathers
-    # clamp into garbage that kv_len masks off
-    kg = kc[page_table]  # (B, max_pages, Hkv, page, D)
-    vg = vc[page_table]
-    hkv = kg.shape[2]
-    kg = kg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, max_pages * page, -1)
-    vg = vg.transpose(0, 2, 1, 3, 4).reshape(b, hkv, max_pages * page, -1)
+    # clamp into garbage that kv_len masks off.  On TPU the page-table
+    # gather is a Pallas kernel writing the (B, Hkv, MP*page, D) layout
+    # directly; off-TPU it stays a plain XLA gather.
+    from repro.kernels.gather import paged_gather
+
+    kg, vg = paged_gather(kc, vc, page_table)
     kv_len = jnp.minimum(t + 1, max_pages * page)  # (B,)
     out = _softmax_attn(
         q, kg, vg, causal=False, softcap=cfg.attention.softcap,

@@ -125,14 +125,13 @@ def _boundary_conv_history(xb: Array, lengths: Array, k: int) -> Array:
     xb: (B, N, W); lengths (B,).  Row i's decode conv history is its last
     ``k-1`` inputs *before* position ``lengths[i]`` — zero-filled on the
     left for rows shorter than the window, exactly like a fresh
-    ``_causal_conv`` pad.  One gather on the zero-padded stream: padded
-    index ``lengths + j`` is raw position ``lengths - (k-1) + j``.
+    ``_causal_conv`` pad.  On TPU this is a Pallas per-tap gather reading
+    the raw stream once (no padded-stream materialization); off-TPU it
+    stays the XLA pad + ``take_along_axis``.
     """
-    bsz = xb.shape[0]
-    pad = jnp.zeros((bsz, k - 1, xb.shape[-1]), xb.dtype)
-    xp = jnp.concatenate([pad, xb], axis=1)  # (B, N+k-1, W)
-    idx = lengths.astype(jnp.int32)[:, None] + jnp.arange(k - 1)[None, :]
-    return jnp.take_along_axis(xp, idx[..., None], axis=1)
+    from repro.kernels.gather import boundary_gather
+
+    return boundary_gather(xb, lengths, k)
 
 
 def _rglru_prefill(params, x: Array, cfg: ModelConfig,

@@ -280,9 +280,9 @@ class SSDMixer(mixer_lib.Mixer):
 
     def differentiable(self, cfg, platform):
         if platform == "tpu":
-            return False, (
-                "the ssd_chunk Pallas kernel is forward-only (no VJP yet — "
-                "see ROADMAP); train off-TPU or pin the XLA scan path"
+            return True, (
+                "ssd_chunk custom VJP: reverse-scan Pallas backward off "
+                "chunk-boundary carry-in residuals"
             )
         return True, "chunked XLA scan is natively differentiable"
 

@@ -33,7 +33,7 @@ def _applicable(cfg, q, k, v, op="forward"):
 
 
 CAUSAL_BACKENDS = ("xla_cumsum", "xla_chunked", "pallas_chunk",
-                   "fused_causal", "recurrent")
+                   "pallas_fused", "fused_causal", "recurrent")
 NC_BACKENDS = ("xla_cumsum", "pallas_nc")
 
 
@@ -80,7 +80,8 @@ def test_expand_equals_shared_at_g1(backend):
 
 
 @pytest.mark.parametrize("backend", ["xla_cumsum", "xla_chunked",
-                                     "fused_causal", "recurrent"])
+                                     "fused_causal", "pallas_fused",
+                                     "recurrent"])
 def test_prefill_state_parity(backend):
     """All prefill-capable backends hand decode the same FlowState."""
     q, k, v = _qkv(3, 1, 4, 2, 32, 8)
@@ -131,7 +132,10 @@ def test_auto_resolution_prefers_pallas_on_tpu():
     q, k, v = _qkv(7, 1, 2, 2, 64, 8)
     sh = ShapeInfo.from_qkv(q, k, v)
     strict = FlowConfig(causal=True, strict_causal=True, chunk_size=16)
-    assert attention.resolve(strict, sh, "tpu").name == "pallas_chunk"
+    assert attention.resolve(strict, sh, "tpu").name == "pallas_fused"
+    # non-strict causal: the fused kernel's contract fails, chunked wins
+    paper = FlowConfig(causal=True, strict_causal=False, chunk_size=16)
+    assert attention.resolve(paper, sh, "tpu").name == "pallas_chunk"
     assert attention.resolve(FlowConfig(), sh, "tpu").name == "pallas_nc"
     # legacy family selectors
     xla = dataclasses.replace(strict, backend="xla")
@@ -189,7 +193,7 @@ def test_pallas_decode_resolution_order():
     assert attention.resolve(pinned, sh, "cpu", op="decode").name == "pallas_decode"
     # forward auto-resolution is untouched by the decode-only backend
     fwd = ShapeInfo(b=1, hq=2, hkv=2, n=64, m=64, d=8, dv=8)
-    assert attention.resolve(cfg, fwd, "tpu").name == "pallas_chunk"
+    assert attention.resolve(cfg, fwd, "tpu").name == "pallas_fused"
 
 
 @pytest.mark.parametrize("gqa", ["shared", "expand"])
@@ -226,7 +230,8 @@ def test_pallas_decode_matches_recurrent_with_churn(gqa):
 # packed prefill (prefill_packed op)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("backend", ["xla_cumsum", "xla_chunked",
-                                     "pallas_chunk"])
+                                     "pallas_chunk", "fused_causal",
+                                     "pallas_fused"])
 def test_prefill_packed_matches_per_row_prefill(backend):
     """A right-padded batch prefilled in one call hands decode the same
     per-row FlowState as prefilling each prompt alone (causality keeps
@@ -253,8 +258,8 @@ def test_prefill_packed_matches_per_row_prefill(backend):
 
 
 def test_prefill_packed_falls_back_past_pinned_fused():
-    """fused_causal cannot gather per-row boundary states; a pinned
-    fused_causal still serves packed admission via the auto fallback."""
+    """A pinned fused_causal serves packed admission natively: boundary
+    masking freezes each row's carry at its own length (no gathers)."""
     q, k, v = _qkv(12, 2, 2, 2, 16, 8)
     cfg = FlowConfig(causal=True, strict_causal=True, chunk_size=16,
                      backend="fused_causal")

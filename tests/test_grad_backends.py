@@ -71,7 +71,7 @@ def test_grad_parity_vs_reference(backend, causal):
 
 
 @pytest.mark.parametrize("backend", ["pallas_chunk", "fused_causal",
-                                     "xla_chunked"])
+                                     "pallas_fused", "xla_chunked"])
 def test_grad_parity_through_prefill(backend):
     """Gradients flow through the (out, FlowState) prefill op too."""
     q, k, v = _qkv(1, 1, 4, 2, 32, 8)

@@ -7,9 +7,11 @@ import pytest
 from repro.attention import chunked_causal_dot_pallas
 from repro.core import FlowConfig, flow_attention_nc
 from repro.kernels.flow_chunk import flow_chunk_ref
-from repro.kernels.flow_nc import flow_attention_nc_pallas
+from repro.kernels.flow_nc import flow_attention_nc_pallas, flow_nc_fused_call
 from repro.kernels.flow_nc.flow_nc import flow_nc_qside_call
 from repro.kernels.flow_nc.ref import flow_nc_qside_ref
+from repro.kernels.gather import boundary_gather, paged_gather
+from repro.kernels.ssd_chunk.ops import ssd_chunk_dot
 from repro.kernels.ssd_chunk.ref import ssd_chunk_ref
 from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk_call
 
@@ -82,6 +84,79 @@ def test_flow_nc_fused_matches_core():
     out = flow_attention_nc_pallas(q, k, v, cfg, interpret=True)
     ref = flow_attention_nc(q, k, v, cfg)
     assert_close(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [16, 64, 256])
+@pytest.mark.parametrize("use_comp", [True, False])
+def test_flow_nc_fused_block_sweep(block, use_comp):
+    """Single-launch fused nc kernel across block sizes (incl. blocks
+    larger than either sequence) and with competition disabled."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    bh, n, m, d, dv = 3, 48, 40, 16, 8
+    q = jax.random.normal(ks[0], (bh, n, d))
+    k = jax.random.normal(ks[1], (bh, m, d))
+    v = jax.random.normal(ks[2], (bh, m, dv))
+    out = flow_nc_fused_call(q, k, v, eps=1e-6, block=block,
+                             use_comp=use_comp, interpret=True)
+    cfg = FlowConfig(use_competition=use_comp)
+    ref = flow_attention_nc(q[:, None], k[:, None], v[:, None], cfg)[:, 0]
+    assert_close(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("decay", ["mild", "strong"])
+def test_ssd_chunk_grads(decay):
+    """ssd_chunk_dot custom VJP (reverse-scan Pallas backward off carry-in
+    residuals) vs jax.grad of the naive oracle — incl. the e^-50 decay
+    regime where boundary-state reconstruction would be catastrophic."""
+    bh, n, p, s, chunk = 2, 64, 16, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = jax.random.normal(ks[0], (bh, n, p)) * 0.5
+    b = jax.random.normal(ks[2], (bh, n, s)) * 0.5
+    c = jax.random.normal(ks[3], (bh, n, s)) * 0.5
+    if decay == "mild":
+        dta = -jnp.abs(jax.random.normal(ks[1], (bh, n, 1))) * 0.1
+    else:
+        dta = jnp.full((bh, n, 1), -50.0)
+
+    ga = jax.grad(lambda *a: jnp.sum(ssd_chunk_dot(*a, chunk, True) ** 2),
+                  (0, 1, 2, 3))(x, dta, b, c)
+    gb = jax.grad(lambda *a: jnp.sum(ssd_chunk_ref(*a) ** 2),
+                  (0, 1, 2, 3))(x, dta, b, c)
+    for got, want, name in zip(ga, gb, ["dx", "ddt", "db", "dc"]):
+        assert np.isfinite(np.asarray(got)).all(), name
+        assert_close(got, want, rtol=2e-3, atol=1e-4, msg=name)
+
+
+def test_paged_gather_matches_xla():
+    """Pallas page-table gather (scalar-prefetch grid) vs the clamped XLA
+    gather it replaces, sentinel page ids included."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    p, hkv, page, d = 5, 2, 8, 16
+    kc = jax.random.normal(ks[0], (p, hkv, page, d))
+    vc = jax.random.normal(ks[1], (p, hkv, page, d))
+    tbl = jnp.array([[0, 3, 5, 5], [2, 2, 4, 5], [1, 0, 5, 5]], jnp.int32)
+    kg, vg = paged_gather(kc, vc, tbl, interpret=True)
+    b, mp = tbl.shape
+    ref = kc[jnp.clip(tbl, 0, p - 1)].transpose(0, 2, 1, 3, 4)
+    assert kg.shape == (b, hkv, mp * page, d)
+    assert_close(kg, ref.reshape(b, hkv, mp * page, d), rtol=1e-6, atol=1e-7)
+    refv = vc[jnp.clip(tbl, 0, p - 1)].transpose(0, 2, 1, 3, 4)
+    assert_close(vg, refv.reshape(b, hkv, mp * page, d), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("lens", [[19, 32, 2], [1, 3, 0], [32, 32, 32]])
+def test_boundary_gather_matches_xla(lens):
+    """Per-tap clipped-load gather vs the padded-stream take_along_axis:
+    short rows zero-fill on the left like a fresh causal-conv pad."""
+    b, n, w, k = 3, 32, 24, 4
+    xb = jax.random.normal(jax.random.PRNGKey(8), (b, n, w))
+    lengths = jnp.asarray(lens)
+    got = boundary_gather(xb, lengths, k, interpret=True)
+    pad = jnp.zeros((b, k - 1, w), xb.dtype)
+    xp = jnp.concatenate([pad, xb], axis=1)
+    idx = lengths[:, None] + jnp.arange(k - 1)[None, :]
+    ref = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    assert_close(got, ref, rtol=1e-6, atol=1e-7)
 
 
 @pytest.mark.parametrize("bh,n,p,s,chunk", [

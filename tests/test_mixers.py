@@ -76,17 +76,15 @@ def test_packed_plan_rejects_local_rings():
         == flow_cfg.n_layers
 
 
-def test_needs_grad_plan_rejects_forward_only_tpu_ssd():
-    """ssd's TPU training path is the forward-only Pallas kernel; a
-    needs_grad plan pinned to platform='tpu' must fail at resolution with
-    the capability named (build-time, not inside jax.grad)."""
+def test_needs_grad_plan_accepts_ssd_on_every_platform():
+    """ssd trains everywhere: the TPU path differentiates through the
+    ssd_chunk custom VJP (reverse-scan Pallas backward), the CPU/GPU path
+    through the chunked XLA scan.  A needs_grad plan must resolve on both
+    — the old TPU fail-fast is gone."""
     cfg = get_smoke_config("mamba2_1p3b")
-    plan = plan_of(cfg, needs_grad=True, platform="tpu")
-    with pytest.raises(MixerResolutionError, match="differentiable"):
-        resolve_mixer("ssd", cfg, plan)
-    # off-TPU the chunked XLA scan differentiates fine
-    assert resolve_mixer("ssd", cfg,
-                         plan_of(cfg, needs_grad=True, platform="cpu"))
+    for platform in ("tpu", "cpu"):
+        plan = plan_of(cfg, needs_grad=True, platform=platform)
+        assert resolve_mixer("ssd", cfg, plan)
 
 
 def test_paged_spec_is_narrowed_per_layer_not_rejected():
