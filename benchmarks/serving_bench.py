@@ -39,26 +39,36 @@ from repro.serving.engine import Engine, PagedSpec, Request
 
 
 def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
-                paged: PagedSpec | None) -> float:
-    """Steady-state decode tokens/s with every slot live at context ctx."""
+                paged: PagedSpec | None, speculate_k: int = 0):
+    """Steady-state decode tokens/s with every slot live at context ctx.
+
+    Counts *committed* tokens (identical to steps x slots for plain
+    decode; each slot's accepted prefix + bonus token under speculation),
+    so speculative rows report accepted tokens/s.  Returns (tokens/s,
+    mean committed tokens per slot-step) — the latter is ``accept_len``,
+    1.0 for plain decode and up to ``speculate_k + 1`` for speculation."""
     # the serving ExecutionPlan, built once per engine like launch/serve.py
-    plan = plan_of(cfg, paged=paged, packed=True)
-    engine = Engine(params, cfg, slots=slots, max_len=ctx + steps + 8,
-                    plan=plan)
+    plan = plan_of(cfg, paged=paged, packed=True, speculate_k=speculate_k)
+    budget = (steps + 2) * (speculate_k + 1)
+    engine = Engine(params, cfg, slots=slots, max_len=ctx + budget + 8,
+                    plan=plan, speculate_k=speculate_k)
     rng = np.random.default_rng(0)
+    reqs = []
     for i in range(slots):
-        engine.submit(Request(
+        reqs.append(Request(
             uid=i,
             prompt=rng.integers(0, cfg.vocab_size, ctx).astype(np.int32),
-            max_new_tokens=steps + 2,
+            max_new_tokens=budget,
         ))
+        engine.submit(reqs[-1])
     engine.step()  # admission (prefill+install) + decode compile/warm
+    count0 = sum(len(r.generated) for r in reqs)
     t0 = time.time()
-    done = 0
     for _ in range(steps):
-        done += engine.step()
+        engine.step()
     dt = time.time() - t0
-    return done / dt
+    tokens = sum(len(r.generated) for r in reqs) - count0
+    return tokens / dt, tokens / (steps * slots)
 
 
 def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
@@ -80,30 +90,47 @@ def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
         ssd=SSDConfig(d_state=32, expand=2, head_dim=32, conv_width=4,
                       chunk_size=32),
     )
-    variants = [("flow", with_kind(base, "flow"), None),
-                ("softmax", with_kind(base, "softmax"), None),
-                ("paged", with_kind(base, "softmax"), page),
-                ("hybrid_rg", hybrid_rg, None),
-                ("hybrid_m2", hybrid_m2, None)]
+    variants = [("flow", with_kind(base, "flow"), None, 0),
+                ("softmax", with_kind(base, "softmax"), None, 0),
+                ("paged", with_kind(base, "softmax"), page, 0),
+                ("hybrid_rg", hybrid_rg, None, 0),
+                ("hybrid_m2", hybrid_m2, None, 0),
+                # speculative variants: self-speculation drafts are the
+                # target's own greedy continuation, so every window
+                # accepts all k drafts — these rows measure the pure
+                # dispatch/sampling amortization win of committing k+1
+                # tokens per engine iteration (accepted tokens/s)
+                ("spec_flow", with_kind(base, "flow"), None, 4),
+                ("spec_hybrid_rg", hybrid_rg, None, 4)]
     rows = {}
-    for name, cfg, paged in variants:
+    for name, cfg, paged, spec_k in variants:
         params = lm.init(jax.random.PRNGKey(0), cfg)
         for s in slots:
             row = {}
             for ctx in ctxs:
-                row[f"serve_{ctx}"] = round(
-                    _bench_cell(params, cfg, slots=s, ctx=ctx, steps=steps,
-                                paged=paged), 2)
+                tps, alen = _bench_cell(params, cfg, slots=s, ctx=ctx,
+                                        steps=steps, paged=paged,
+                                        speculate_k=spec_k)
+                row[f"serve_{ctx}"] = round(tps, 2)
             row["trend_vs_ctx"] = round(
                 row[f"serve_{ctxs[0]}"] / max(row[f"serve_{ctxs[-1]}"], 1e-9),
                 2)
+            if spec_k:
+                row["accept_len"] = round(alen, 2)
             rows[f"{name}[s{s}]"] = row
-    cols = [f"serve_{c}" for c in ctxs] + ["trend_vs_ctx"]
+    cols = [f"serve_{c}" for c in ctxs] + ["trend_vs_ctx", "accept_len"]
     print_table("Serving: decode tokens/s by slots x context", rows, cols)
     print("\n[trend] decode throughput ratio ctx "
           f"{ctxs[0]} -> {ctxs[-1]} (1.0 = flat in context length):")
     for name, row in rows.items():
         print(f"[trend]   {name:14s} x{row['trend_vs_ctx']}")
+    for name, row in rows.items():
+        if "accept_len" in row:
+            plain = rows.get(name.replace("spec_", ""), {})
+            base_t = plain.get(f"serve_{ctxs[0]}", 0)
+            spec_t = row[f"serve_{ctxs[0]}"]
+            print(f"[spec]    {name:18s} accept_len={row['accept_len']} "
+                  f"accepted tok/s x{spec_t / max(base_t, 1e-9):.2f} vs plain")
     save_table("serving_bench", rows)
     return rows
 

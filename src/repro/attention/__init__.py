@@ -4,7 +4,7 @@ This package is the ONLY place in the repo that selects how Flow-Attention
 (paper Eq. 4/7/8, Alg. 2) actually executes.  Call sites build ONE
 ``ExecutionPlan`` (FlowConfig + static shapes + mesh/axis ``ShardSpec`` +
 serving options) at module-construction time and use the canonical
-three-op API through the bound executor — never naming an execution path:
+op API through the bound executor — never naming an execution path:
 
     from repro import attention
 
@@ -13,6 +13,7 @@ three-op API through the bound executor — never naming an execution path:
     out = ex.forward(q, k, v)                      # cfg.causal picks variant
     out, state = ex.prefill(q, k, v)               # strict-causal + FlowState
     state, out = ex.decode_step(state, q, k, v)
+    out, traj = ex.verify_step(state, q, k, v)     # speculative verifier
 
 The per-call module functions ``attention.forward/prefill/decode_step(...,
 FlowConfig)`` remain as deprecation shims (warn once, behave identically);
@@ -101,7 +102,11 @@ Serving admission additionally uses the ``prefill_packed`` op (provided by
 the cumulative-sum strategies): ``prefill(q, k, v, cfg, lengths=...)``
 consumes a right-padded batch of prompts in one call and gathers each
 row's FlowState at its own boundary — exact because causality keeps
-padding out of every prefix.
+padding out of every prefix.  Speculative decoding uses the ``verify`` op
+(``ex.verify_step``): one carry-in pass scores a drafted window and
+returns every position's boundary state, so accept-prefix rollback is a
+``select_state`` gather; backends self-report the capability in
+``Backend.verify_support``.
 
 Registering a new backend
 =========================
@@ -156,9 +161,10 @@ from repro.attention.api import (
     prefill,
     resolve,
     resolve_for_training,
+    verify_step,
 )
 from repro.attention.dots import causal_dot, causal_dot_grouped
-from repro.attention.recurrent import FlowState, init_state
+from repro.attention.recurrent import FlowState, init_state, select_state
 from repro.attention._pallas import chunked_causal_dot_pallas
 from repro.attention import backends as _backends  # registers the builtins
 
@@ -183,7 +189,9 @@ __all__ = [
     "forward",
     "prefill",
     "decode_step",
+    "verify_step",
     "init_state",
+    "select_state",
     "causal_dot",
     "causal_dot_grouped",
     "chunked_causal_dot_pallas",

@@ -85,16 +85,20 @@ def resolve(cfg_or_plan, shapes: ShapeInfo | None = None,
 
 
 def explain(cfg_or_plan, shapes: ShapeInfo | None = None,
-            platform: str | None = None, *, op: str = "forward",
+            platform: str | None = None, *, op: str | None = None,
             needs_grad: bool = False, shard=None):
-    """Plan-first: ``explain(plan) -> PlanExplanation`` (printable report
-    with the shard axis and per-backend ``shard_support`` verdicts).
+    """Plan-first: ``explain(plan) -> PlanExplanation``.
 
-    Legacy form returns ``[(name, applicable, reason)]`` rows.
+    The plan form returns a printable report with the shard axis and
+    per-backend, per-op verdicts — every op the plan implies unless a
+    specific ``op`` is requested.  The legacy ``(cfg, shapes, platform)``
+    form returns ``[(name, applicable, reason)]`` rows for one op
+    (default ``"forward"``).
     """
     if isinstance(cfg_or_plan, ExecutionPlan):
         return explain_plan(cfg_or_plan, op=op)
-    return registry.explain(cfg_or_plan, shapes, platform, op=op,
+    return registry.explain(cfg_or_plan, shapes, platform,
+                            op=op or "forward",
                             needs_grad=needs_grad, shard=shard)
 
 
@@ -119,8 +123,7 @@ def resolve_for_training(cfg_or_plan, shapes: ShapeInfo | None = None,
 
 
 def forward(q: Array, k: Array, v: Array, cfg) -> Array:
-    """Full-sequence Flow-Attention; the plan's (or config's) ``causal``
-    selects the variant.
+    """Full-sequence Flow-Attention (the plan's ``causal`` picks the variant).
 
     q: (B, Hq, N, D); k: (B, Hkv, M, D); v: (B, Hkv, M, Dv) -> (B, Hq, N, Dv).
     ``cfg`` may be an ``ExecutionPlan`` (preferred) or a bare ``FlowConfig``
@@ -157,4 +160,20 @@ def decode_step(state, q: Array, k: Array, v: Array, cfg):
     shim, warns once).
     """
     return _as_executor(cfg, deprecated_key="decode_step").decode_step(
+        state, q, k, v)
+
+
+def verify_step(state, q: Array, k: Array, v: Array, cfg):
+    """Score a drafted window of n tokens from ``state`` in one pass.
+
+    The speculative-decoding verifier: q (B, Hq, n, D) / k / v carry
+    ``n = k_draft + 1`` candidate positions continuing each row's context
+    at ``state.t``.  Returns ``(out, traj)``: per-position outputs matching
+    n sequential ``decode_step`` calls, and a trajectory ``FlowState``
+    (position axis at index 1) whose accepted boundary is gathered with
+    ``attention.select_state(traj, accepted)``.  ``cfg`` may be an
+    ``ExecutionPlan`` (preferred) or a bare ``FlowConfig`` (deprecated
+    shim, warns once).
+    """
+    return _as_executor(cfg, deprecated_key="verify_step").verify_step(
         state, q, k, v)

@@ -20,7 +20,10 @@ launch over the whole slot pool) ahead of ``recurrent``, which stays the
 decode fallback and a token-by-token oracle.  The pipeline-based causal
 strategies additionally provide ``prefill_packed`` — prefill over a
 right-padded batch of prompts with the ``FlowState`` gathered at each row's
-own boundary (the serving Worker's batched admission path).
+own boundary (the serving Worker's batched admission path) — and ``verify``,
+the speculative-decoding op: continue a ``FlowState`` over a drafted window
+in one carry-in pass, returning every position's boundary state so
+accept-prefix rollback is a gather (``pipeline.causal_verify``).
 
 Every built-in backend declares gradient capability (``differentiable``):
 the XLA/scan strategies are natively differentiable, and the Pallas kernels
@@ -56,7 +59,7 @@ def _check_causal_self(cfg: FlowConfig, shapes: ShapeInfo):
 
 
 def _check_state_ops(cfg: FlowConfig, op: str):
-    if op in ("prefill", "prefill_packed", "decode") and not (
+    if op in ("prefill", "prefill_packed", "decode", "verify") and not (
         cfg.strict_causal and cfg.use_competition
     ):
         return "recurrent state requires strict_causal competition"
@@ -67,7 +70,7 @@ class XlaCumsum(Backend):
     """Pure-XLA reference strategy: plain sums (non-causal) or full-length
     cumsums (causal).  Always applicable — the resolution floor."""
 
-    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    provides = frozenset({"forward", "prefill", "prefill_packed", "verify"})
     differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
@@ -79,6 +82,9 @@ class XlaCumsum(Backend):
         if why:
             return False, why
         return True, "universal fallback"
+
+    def verify_step(self, state, q, k, v, cfg):
+        return pipeline.causal_verify(state, q, k, v, cfg)
 
     def causal_dot_fn(self, cfg):
         """Grouped causal aggregation dot — also the shard-local inner
@@ -99,7 +105,7 @@ class XlaChunked(Backend):
     """Causal aggregation as a lax.scan over MXU-friendly chunks (absorbed
     from the former ``core/chunked.py``)."""
 
-    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    provides = frozenset({"forward", "prefill", "prefill_packed", "verify"})
     differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
@@ -112,9 +118,14 @@ class XlaChunked(Backend):
         c = cfg.chunk_size
         if not c or c <= 0:
             return False, "chunk_size <= 0"
-        if shapes.n % c or shapes.n <= c:
+        if op != "verify" and (shapes.n % c or shapes.n <= c):
+            # a drafted verify window is a handful of tokens by design and
+            # never goes through the blocked dot — exempt from chunkability
             return False, f"N={shapes.n} not chunkable by chunk_size={c}"
         return True, "chunked scan"
+
+    def verify_step(self, state, q, k, v, cfg):
+        return pipeline.causal_verify(state, q, k, v, cfg)
 
     def _dot(self, cfg):
         return functools.partial(chunked_causal_dot_grouped,
@@ -136,7 +147,7 @@ class PallasChunk(Backend):
     (carried (D,Dv) state in VMEM scratch).  Differentiable through the
     ``attention/vjp.py`` custom VJP (Pallas backward kernels)."""
 
-    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    provides = frozenset({"forward", "prefill", "prefill_packed", "verify"})
     differentiable = frozenset({"forward", "prefill", "prefill_packed"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
@@ -151,6 +162,12 @@ class PallasChunk(Backend):
         if platform != "tpu" and not explicit:
             return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
         return True, "pallas kernel"
+
+    def verify_step(self, state, q, k, v, cfg):
+        # the drafted window is a handful of tokens: the carry-in cumsum
+        # pass is the right realization at any scale a draft produces, so
+        # no grid launch is spent on it
+        return pipeline.causal_verify(state, q, k, v, cfg)
 
     def _dot(self, cfg):
         # the jit'd wrapper shrinks the chunk to divide N, so any shape that
@@ -206,7 +223,7 @@ class PallasFused(Backend):
     saves no (B,H,N)-sized residuals.  Packed prefill masks each row past
     its length so the final carry IS the boundary FlowState (no gathers)."""
 
-    provides = frozenset({"forward", "prefill", "prefill_packed"})
+    provides = frozenset({"forward", "prefill", "prefill_packed", "verify"})
     differentiable = frozenset({"forward", "prefill"})
 
     def supports(self, cfg, shapes, platform, *, op="forward", explicit=False):
@@ -236,6 +253,11 @@ class PallasFused(Backend):
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return flow_fused_forward(q, k, v, cfg, return_state=True,
                                   lengths=lengths)
+
+    def verify_step(self, state, q, k, v, cfg):
+        # verify windows are tiny; the carry-in cumsum pass beats a kernel
+        # launch, and the trajectory it returns is what rollback gathers
+        return pipeline.causal_verify(state, q, k, v, cfg)
 
 
 class FusedCausal(Backend):

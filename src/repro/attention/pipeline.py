@@ -82,6 +82,112 @@ def nc_forward(q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
     return _ungroup(out).astype(out_dtype)
 
 
+def causal_verify(state, q: Array, k: Array, v: Array, cfg: FlowConfig,
+                  dot_fn: DotFn | None = None):
+    """Score a drafted window of n tokens in one chunked pass from ``state``.
+
+    The speculative-decoding verifier: continues the strict-causal recurrence
+    from a boundary ``FlowState`` over ``n = k_draft + 1`` candidate
+    positions, producing every position's output AND every position's
+    boundary state in a single pass — the inclusive cumsums that the chunked
+    scan computes anyway ARE the per-position states, so accept-prefix
+    rollback is a gather, not a recompute.
+
+    q: (B, Hq, n, D); k: (B, Hkv, n, D); v: (B, Hkv, n, Dv) with per-row
+    start offsets taken from ``state.t`` (continuous batching: slots verify
+    at heterogeneous depths).  Requires ``strict_causal`` competition, like
+    every state-producing op.
+
+    Returns ``(out, traj)`` where ``out`` is (B, Hq, n, Dv) — position j is
+    bit-identical (up to fp32 reassociation) to what ``decode_step`` would
+    emit after consuming tokens 1..j — and ``traj`` is a trajectory
+    ``FlowState`` whose leaves carry an extra position axis at index 1
+    (``t``: (B,n); sums: (B,n,Hkv,D); ``z``: (B,n,Hkv); ``s``:
+    (B,n,Hkv,D,Dv)).  Select the accepted boundary with
+    ``recurrent.select_state(traj, accepted_idx)``.
+
+    ``dot_fn`` is accepted for registry-signature symmetry but unused: the
+    window is tiny (a handful of drafted tokens), so the in-window
+    aggregation is always realized as a cumsum of rank-1 updates against the
+    carried ``s`` panel.
+    """
+    del dot_fn  # in-window aggregation is cumsum-sized by construction
+    from repro.attention.recurrent import FlowState
+
+    out_dtype = q.dtype
+    eps = cfg.eps
+    b, hq, n, d = q.shape
+    assert k.shape[2] == n, "verify_step requires N == M over the window"
+    assert cfg.strict_causal and cfg.use_competition, (
+        "verify_step continues a recurrent state: requires strict_causal "
+        "competition"
+    )
+    k, v = expand_kv(q, k, v, cfg)
+    hkv = k.shape[1]
+
+    phi_q = phi_map(q.astype(jnp.float32), cfg.phi)
+    phi_k = phi_map(k.astype(jnp.float32), cfg.phi)
+    vf = v.astype(jnp.float32)
+
+    qg = _group(phi_q, hkv)  # (B,Hkv,G,n,D)
+    g = qg.shape[2]
+
+    # per-row position counts continue from the carried state.t
+    t_traj = state.t[:, None] + jnp.arange(1, n + 1, dtype=jnp.int32)  # (B,n)
+    counts = t_traj.astype(jnp.float32)
+    normal_k = counts[:, None, :]  # (B,1,n) sources seen so far
+    normal_q = normal_k * g  # sinks seen so far (G per position)
+
+    # (1) incoming / outgoing flows: in-window cumsums offset by the carry
+    k_csum = state.k_sum[:, :, None, :] + jnp.cumsum(phi_k, axis=2)
+    q_csum = state.q_sum[:, :, None, :] + jnp.cumsum(qg.sum(axis=2), axis=2)
+    sink_in = normal_k[:, :, None, :] / jnp.einsum(
+        "bhgnd,bhnd->bhgn", qg + eps, k_csum + eps)
+    src_out = normal_q / jnp.einsum(
+        "bhnd,bhnd->bhn", phi_k + eps, q_csum + eps)
+
+    # (2) conservation refinement
+    ko_csum = state.ko_sum[:, :, None, :] + jnp.cumsum(
+        phi_k * src_out[..., None], axis=2)
+    cons_sink = jnp.einsum(
+        "bhgnd,bhnd->bhgn", qg + eps, ko_csum + eps) / normal_q[:, :, None, :]
+    qi_csum = state.qi_sum[:, :, None, :] + jnp.cumsum(
+        (qg * sink_in[..., None]).sum(axis=2), axis=2)
+    cons_src = jnp.einsum(
+        "bhnd,bhnd->bhn", phi_k + eps, qi_csum + eps) / normal_k
+    cons_src = jnp.clip(cons_src, -1.0, 1.0)
+
+    # (3) competition & allocation
+    if cfg.use_allocation:
+        alloc = jax.nn.sigmoid(cons_sink)
+    else:
+        alloc = jnp.ones_like(cons_sink)
+    e = jnp.exp(cons_src)  # (B,Hkv,n)
+    z = state.z[:, :, None] + jnp.cumsum(e, axis=-1)
+    v_w = vf * e[..., None]
+
+    # (4) aggregation against the per-position state panel: the window is a
+    # handful of tokens, so materializing the (B,Hkv,n,D,Dv) trajectory is
+    # cheaper than any blocked dot — and rollback needs it anyway.
+    s_traj = state.s[:, :, None] + jnp.cumsum(
+        jnp.einsum("bhnd,bhne->bhnde", phi_k, v_w), axis=2)
+    q_in = qg * sink_in[..., None]
+    agg = jnp.einsum("bhgnd,bhnde->bhgne", q_in, s_traj)
+    scale = normal_k[:, :, None, :, None] / z[:, :, None, :, None]
+    out = agg * scale * alloc[..., None]
+
+    traj = FlowState(
+        t=t_traj,
+        q_sum=q_csum.swapaxes(1, 2),
+        k_sum=k_csum.swapaxes(1, 2),
+        ko_sum=ko_csum.swapaxes(1, 2),
+        qi_sum=qi_csum.swapaxes(1, 2),
+        z=z.swapaxes(1, 2),
+        s=s_traj.swapaxes(1, 2),
+    )
+    return _ungroup(out).astype(out_dtype), traj
+
+
 def causal_forward(
     q: Array,
     k: Array,

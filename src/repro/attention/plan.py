@@ -1,5 +1,4 @@
-"""ExecutionPlan: everything the registry needs to bind execution, in one
-object built once at module-construction time.
+"""ExecutionPlan: the execution context bound once, not threaded per call.
 
 Before this existed, every call site threaded execution context as ad-hoc
 kwargs per call — backend pins in ``FlowConfig.backend``, ``lengths=`` for
@@ -18,8 +17,9 @@ together:
   the softmax-baseline cache layers; ignored by flow execution
 * ``needs_grad`` / ``platform`` — resolution filters
 
-``resolve(plan)`` returns a ``BoundExecutor`` whose three canonical ops
-(``forward`` / ``prefill`` / ``decode_step``) resolve through the registry
+``resolve(plan)`` returns a ``BoundExecutor`` whose canonical ops
+(``forward`` / ``prefill`` / ``decode_step`` / ``verify_step``) resolve
+through the registry
 with the plan applied — a sharded plan lands on the context-parallel
 backends (``cp_nc``/``cp_causal``), an unsharded one behaves exactly like
 the legacy per-call API.  ``explain(plan)`` renders the same triage as a
@@ -54,14 +54,22 @@ class ExecutionPlan:
     paged: Any = None  # serving.paged.PagedSpec for softmax baseline caches
     needs_grad: bool = False
     platform: str | None = None
+    #: speculative decoding: number of drafted tokens scored per verify
+    #: window (0 = plain decode).  Carried on the plan so layer resolution
+    #: can demand the ``verify_capable`` mixer capability and the registry
+    #: can triage the ``verify`` op at build time.
+    speculate_k: int = 0
 
     def with_shapes(self, shapes: ShapeInfo) -> "ExecutionPlan":
+        """Copy of this plan with static call shapes attached."""
         return dataclasses.replace(self, shapes=shapes)
 
     def with_flow(self, flow: FlowConfig) -> "ExecutionPlan":
+        """Copy of this plan with ``flow`` (the ``FlowConfig``) replaced."""
         return dataclasses.replace(self, flow=flow)
 
     def describe(self) -> str:
+        """One-line summary of the plan's non-default fields."""
         bits = [f"backend={self.flow.backend!r}" if self.flow else "flow=?"]
         if self.shard is not None:
             bits.append(f"shard[{self.shard.describe()}]")
@@ -71,20 +79,23 @@ class ExecutionPlan:
             bits.append(f"paged[{getattr(self.paged, 'page_size', '?')}]")
         if self.needs_grad:
             bits.append("needs_grad")
+        if self.speculate_k:
+            bits.append(f"speculate_k={self.speculate_k}")
         return "ExecutionPlan(" + ", ".join(bits) + ")"
 
 
 class BoundExecutor:
-    """The three canonical ops bound to one ``ExecutionPlan``.
+    """The canonical ops bound to one ``ExecutionPlan``.
 
     Resolution happens per op at trace time (pure python, deterministic);
     the plan's shard/grad/platform context is applied uniformly so call
-    sites never re-thread it.  ``decode_step`` drops the shard: a decode
-    step consumes one position — there is no sequence axis left to shard,
-    and the O(d^2) state is batch-led.
+    sites never re-thread it.  ``decode_step`` and ``verify_step`` drop the
+    shard: they consume one position / a drafted handful — there is no
+    sequence axis left to shard, and the O(d^2) state is batch-led.
     """
 
     def __init__(self, plan: ExecutionPlan):
+        """Bind ``plan`` (its ``flow`` must be set) for per-op resolution."""
         if plan.flow is None:
             raise ValueError(
                 "ExecutionPlan.flow is unset — attention-level execution "
@@ -95,6 +106,7 @@ class BoundExecutor:
 
     @property
     def flow(self) -> FlowConfig:
+        """The plan's ``FlowConfig`` (set by construction)."""
         return self.plan.flow
 
     def _shapes(self, q, k, v) -> ShapeInfo:
@@ -111,16 +123,21 @@ class BoundExecutor:
                 "ShapeInfo (plan.with_shapes) or call the op with arrays"
             )
         cfg = p.flow
-        if op in ("prefill", "prefill_packed", "decode"):
+        if op in ("prefill", "prefill_packed", "decode", "verify"):
             cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
-        shard = None if op == "decode" else p.shard
+        # decode consumes one position and verify a drafted handful: there
+        # is no sequence axis left to shard, and the O(d^2) state is
+        # batch-led — both ops drop the plan's ShardSpec
+        shard = None if op in ("decode", "verify") else p.shard
         return registry.resolve(cfg, shapes, p.platform, op=op,
                                 needs_grad=p.needs_grad, shard=shard)
 
     # canonical ops ---------------------------------------------------------
     def forward(self, q: Array, k: Array, v: Array) -> Array:
-        """Full-sequence Flow-Attention; ``plan.flow.causal`` picks the
-        variant.  q: (B,Hq,N,D); k: (B,Hkv,M,D); v: (B,Hkv,M,Dv)."""
+        """Full-sequence Flow-Attention (``plan.flow.causal`` picks the variant).
+
+        q: (B,Hq,N,D); k: (B,Hkv,M,D); v: (B,Hkv,M,Dv) -> (B,Hq,N,Dv).
+        """
         be = self.backend("forward", self._shapes(q, k, v))
         if self.plan.shard is not None:
             return be.forward(q, k, v, self.plan.flow, shard=self.plan.shard)
@@ -150,6 +167,21 @@ class BoundExecutor:
         be = self.backend("decode", self._shapes(q, k, v))
         return be.decode_step(state, q, k, v, cfg)
 
+    def verify_step(self, state, q: Array, k: Array, v: Array):
+        """Score a drafted window of n tokens from ``state`` in one pass.
+
+        The speculative-decoding verifier: q/k/v carry ``n = k_draft + 1``
+        positions continuing each row's context at ``state.t``.  Returns
+        ``(out, traj)`` where ``out`` (B,Hq,n,Dv) matches what n sequential
+        ``decode_step`` calls would emit and ``traj`` is a trajectory
+        ``FlowState`` (position axis at index 1) — gather the accepted
+        boundary with ``attention.select_state(traj, accepted)``.
+        """
+        cfg = dataclasses.replace(self.plan.flow, causal=True,
+                                  strict_causal=True)
+        be = self.backend("verify", self._shapes(q, k, v))
+        return be.verify_step(state, q, k, v, cfg)
+
 
 def resolve_plan(plan: ExecutionPlan) -> BoundExecutor:
     """Bind an ``ExecutionPlan`` to an executor (the plan-first ``resolve``).
@@ -168,43 +200,83 @@ def resolve_plan(plan: ExecutionPlan) -> BoundExecutor:
 
 @dataclasses.dataclass(frozen=True)
 class PlanExplanation:
-    """Human-readable resolution triage for one (plan, op)."""
+    """Human-readable resolution triage for one plan, per op.
+
+    ``sections`` is ``((op, rows), ...)`` with one entry per explained op
+    (a single entry when a specific op was requested); each ``rows`` is
+    ``((name, applicable, reason), ...)`` for every registered backend.
+    ``op`` / ``rows`` expose the first section for single-op callers.
+    """
 
     plan: ExecutionPlan
-    op: str
     platform: str
-    rows: tuple  # ((name, applicable, reason), ...)
+    sections: tuple  # ((op, ((name, applicable, reason), ...)), ...)
+
+    @property
+    def op(self) -> str:
+        """The first explained op (the requested one for single-op calls)."""
+        return self.sections[0][0]
+
+    @property
+    def rows(self) -> tuple:
+        """The first section's ``(name, applicable, reason)`` rows."""
+        return self.sections[0][1]
 
     def __str__(self) -> str:
+        """Render the triage: plan header, then per-op OK/no rows."""
         p = self.plan
-        head = [f"{p.describe()} op={self.op!r} platform={self.platform!r}"]
+        head = [f"{p.describe()} platform={self.platform!r}"]
         if p.shard is not None:
             head.append(f"  sharded over {p.shard.describe()}")
         elif p.flow is not None:
             head.append("  unsharded (no ShardSpec)")
-        body = [
-            f"  {'OK ' if ok else 'no '} {name}: {reason}"
-            for name, ok, reason in self.rows
-        ]
+        body = []
+        for op, rows in self.sections:
+            body.append(f" op={op!r}:")
+            body.extend(
+                f"  {'OK ' if ok else 'no '} {name}: {reason}"
+                for name, ok, reason in rows
+            )
         return "\n".join(head + body)
 
 
-def explain_plan(plan: ExecutionPlan, *, op: str = "forward") -> PlanExplanation:
-    """Per-backend verdicts for a plan — including ``shard_support``
-    reasons when the plan is sharded.  ``str()`` the result to print it."""
+def explain_plan(plan: ExecutionPlan, *,
+                 op: str | None = None) -> PlanExplanation:
+    """Per-backend, per-op verdicts for a plan.
+
+    With ``op=None`` (the default) every op the plan implies is triaged —
+    ``forward`` / ``prefill`` / ``decode``, plus ``prefill_packed`` for
+    packed plans and ``verify`` for speculative ones — so a backend that
+    provides forward but not ``decode_step`` (or ``verify_step``) shows its
+    per-op rejection instead of silently vanishing from the report.  Pass a
+    specific ``op`` to restrict the report.  ``str()`` the result to print
+    it; sharded plans include each backend's ``shard_support`` reason.
+    """
     if plan.flow is None:
         raise ValueError("ExecutionPlan.flow is unset — nothing to explain")
     platform = plan.platform or jax.default_backend()
-    cfg = plan.flow
-    if op in ("prefill", "prefill_packed", "decode"):
-        cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
     shapes = plan.shapes
     if shapes is None:
         raise ValueError(
             "explain(plan) needs static shapes: plan.with_shapes(ShapeInfo(...))"
         )
-    shard = None if op == "decode" else plan.shard
-    rows = registry.explain(cfg, shapes, platform, op=op,
-                            needs_grad=plan.needs_grad, shard=shard)
-    return PlanExplanation(plan=plan, op=op, platform=platform,
-                           rows=tuple(rows))
+    if op is None:
+        ops = ["forward", "prefill"]
+        if plan.packed:
+            ops.append("prefill_packed")
+        ops.append("decode")
+        if plan.speculate_k:
+            ops.append("verify")
+    else:
+        ops = [op]
+    sections = []
+    for one in ops:
+        cfg = plan.flow
+        if one in ("prefill", "prefill_packed", "decode", "verify"):
+            cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
+        shard = None if one in ("decode", "verify") else plan.shard
+        rows = registry.explain(cfg, shapes, platform, op=one,
+                                needs_grad=plan.needs_grad, shard=shard)
+        sections.append((one, tuple(rows)))
+    return PlanExplanation(plan=plan, platform=platform,
+                           sections=tuple(sections))

@@ -53,6 +53,21 @@ def init_state(batch: int, n_kv: int, d: int, dv: int | None = None) -> FlowStat
     )
 
 
+def select_state(traj: FlowState, idx: Array) -> FlowState:
+    """Gather one boundary from a trajectory ``FlowState``.
+
+    ``traj`` leaves carry a position axis at index 1 (as returned by
+    ``pipeline.causal_verify``); ``idx`` (B,) int selects, per batch row, the
+    boundary after consuming ``idx+1`` window tokens.  This is the whole
+    accept-prefix rollback: O(d^2) gathered, nothing recomputed.
+    """
+    def gat(leaf: Array) -> Array:
+        ii = idx.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.int32)
+        return jnp.take_along_axis(leaf, ii, axis=1)[:, 0]
+
+    return FlowState(*(gat(leaf) for leaf in traj))
+
+
 def decode_step(
     state: FlowState, q: Array, k: Array, v: Array, cfg: FlowConfig
 ) -> tuple[FlowState, Array]:

@@ -1,8 +1,8 @@
 """Execution-strategy registry for Flow-Attention.
 
 One Flow-Attention, many ways to run it.  A ``Backend`` packages one
-execution strategy behind the canonical three-op API (``forward`` /
-``prefill`` / ``decode_step``) and *self-reports* its applicability —
+execution strategy behind the canonical op API (``forward`` / ``prefill`` /
+``decode_step`` / ``verify_step``) and *self-reports* its applicability —
 platform, causality, divisibility, GQA mode, competition flags — via
 ``supports()``.  ``resolve()`` turns ``FlowConfig.backend`` into a concrete
 backend deterministically:
@@ -67,6 +67,7 @@ class ShapeInfo:
 
     @classmethod
     def from_qkv(cls, q: Array, k: Array, v: Array) -> "ShapeInfo":
+        """Build the static shape record from concrete q/k/v arrays."""
         return cls(b=q.shape[0], hq=q.shape[1], n=q.shape[2], d=q.shape[3],
                    hkv=k.shape[1], m=k.shape[2], dv=v.shape[3])
 
@@ -91,11 +92,13 @@ class ShardSpec:
 
     @property
     def axis_size(self) -> int | None:
+        """Device count along the sharded axis (None without a mesh)."""
         if self.mesh is None:
             return None
         return int(self.mesh.shape[self.axis])
 
     def describe(self) -> str:
+        """One-line summary: axis name, way-ness, batch axis, inner pick."""
         size = self.axis_size
         return (f"axis {self.axis!r}" + (f" ({size}-way)" if size else "")
                 + (f", batch over {self.batch_axis!r}" if self.batch_axis else "")
@@ -112,9 +115,11 @@ class Backend:
     """
 
     name: str = "?"
-    #: subset of {"forward", "prefill", "prefill_packed", "decode"} this
-    #: backend implements (``prefill_packed``: right-padded prompt batch
-    #: with the FlowState gathered at per-row boundaries)
+    #: subset of {"forward", "prefill", "prefill_packed", "decode",
+    #: "verify"} this backend implements (``prefill_packed``: right-padded
+    #: prompt batch with the FlowState gathered at per-row boundaries;
+    #: ``verify``: speculative-decoding verifier — score a drafted window
+    #: in one chunked pass continuing from a FlowState)
     provides: frozenset = frozenset({"forward"})
     #: subset of ``provides`` that ``jax.grad`` flows through — natively
     #: differentiable XLA/scan code or a registered ``jax.custom_vjp``.
@@ -151,8 +156,7 @@ class Backend:
     def shard_support(self, op: str = "forward", shard: "ShardSpec | None" = None,
                       *, cfg=None, shapes: "ShapeInfo | None" = None,
                       platform: str | None = None):
-        """(ok, reason) — whether ``op`` can run with the sequence axis
-        sharded per ``shard``.
+        """(ok, reason) — can ``op`` run with the sequence axis sharded?
 
         The default answer is the declarative ``shardable`` set; backends
         with collective glue override this to also validate the mesh axis,
@@ -168,24 +172,53 @@ class Backend:
                else "") + ")"
         )
 
+    def verify_support(self, op: str = "verify"):
+        """(ok, reason) — whether the backend can score a drafted window.
+
+        Speculative decoding needs ``verify_step``: continue a recurrent
+        ``FlowState`` over k drafted tokens in one pass and hand back every
+        position's boundary state for accept-prefix rollback.  The default
+        answer is declarative (``"verify" in provides``); override for
+        config-dependent refinements.  Consulted by resolution exactly like
+        ``grad_support`` / ``shard_support``, so a failed speculative plan
+        raises ``ResolutionError`` with each backend's own reason.
+        """
+        if "verify" in self.provides:
+            return True, "carry-in chunked verify"
+        return False, (
+            "no verify_step (cannot continue a FlowState over a drafted "
+            "window; speculative decoding needs a chunked-scan strategy)"
+        )
+
     # canonical ops ---------------------------------------------------------
     def forward(self, q: Array, k: Array, v: Array, cfg: FlowConfig) -> Array:
+        """Full-sequence Flow-Attention -> (B, Hq, N, Dv)."""
         raise NotImplementedError(f"{self.name} does not provide forward")
 
     def prefill(self, q: Array, k: Array, v: Array, cfg: FlowConfig,
                 *, lengths: Array | None = None):
+        """Consume a prompt -> (per-position outputs, decode FlowState)."""
         raise NotImplementedError(f"{self.name} does not provide prefill")
 
     def decode_step(self, state, q: Array, k: Array, v: Array, cfg: FlowConfig):
+        """Advance one token -> (new FlowState, out (B, Hq, 1, Dv))."""
         raise NotImplementedError(f"{self.name} does not provide decode_step")
+
+    def verify_step(self, state, q: Array, k: Array, v: Array, cfg: FlowConfig):
+        """Score a drafted window in one pass -> (out, trajectory FlowState)."""
+        raise NotImplementedError(f"{self.name} does not provide verify_step")
 
 
 class ResolutionError(ValueError):
-    """No backend applied; ``rejections`` is ((name, reason), ...) for every
-    candidate so callers (CI gates, benchmark sweeps) can report each
-    backend's own reason instead of only the last one."""
+    """No backend applied to a resolution request.
+
+    ``rejections`` is ``((name, reason), ...)`` for every candidate so
+    callers (CI gates, benchmark sweeps) can report each backend's own
+    reason instead of only the last one.
+    """
 
     def __init__(self, message: str, rejections=()):
+        """Store the human message plus the per-candidate rejections."""
         super().__init__(message)
         self.rejections = tuple(rejections)
 
@@ -212,6 +245,7 @@ def register_backend(name: str, impl: Backend, *, before: str | None = None):
 
 
 def get_backend(name: str) -> Backend:
+    """Look up a registered backend by name (ValueError when unknown)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -245,12 +279,22 @@ def _candidates(cfg: FlowConfig) -> tuple[list, bool]:
 def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
            op: str, explicit: bool, needs_grad: bool,
            shard: ShardSpec | None = None):
-    """(applicable, reason) for one backend — the single triage sequence
-    (provides -> gradient capability -> shard capability -> supports)
-    shared by ``resolve`` and ``explain`` so their answers can never drift
-    apart."""
+    """(applicable, reason) for one backend under the shared triage.
+
+    The single triage sequence (provides -> gradient capability -> shard
+    capability -> supports) shared by ``resolve`` and ``explain`` so their
+    answers can never drift apart.
+    """
     if op not in be.provides:
+        if op == "verify":
+            # the backend's own verify_support reason (mirrors grad/shard
+            # triage) so speculative resolution failures are debuggable
+            return be.verify_support(op)
         return False, f"does not provide {op}"
+    if op == "verify":
+        ok, why = be.verify_support(op)
+        if not ok:
+            return False, why
     if needs_grad:
         ok, why = be.grad_support(op)
         if not ok:
@@ -315,9 +359,12 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
 def explain(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
             *, op: str = "forward", needs_grad: bool = False,
             shard: ShardSpec | None = None) -> list:
-    """[(name, applicable, reason)] for every registered backend — debugging
-    aid and the data source for benchmark sweeps.  With ``shard`` the
-    reasons include each backend's ``shard_support`` verdict."""
+    """Triage ``op`` for every registered backend.
+
+    Returns ``[(name, applicable, reason)]`` rows — debugging aid and the
+    data source for benchmark sweeps.  With ``shard`` the reasons include
+    each backend's ``shard_support`` verdict.
+    """
     platform = platform or jax.default_backend()
     _, explicit = _candidates(cfg)
     return [

@@ -8,6 +8,12 @@ Softmax-mode baselines can serve from the paged KV pool instead of dense
 
     python -m repro.launch.serve --arch flowformer-lm --smoke \
         --attn softmax --paged --page-size 64
+
+Speculative decoding (greedy output is token-for-token identical to plain
+decode; see docs/serving.md):
+
+    python -m repro.launch.serve --arch flowformer-lm --smoke \
+        --draft self --speculate-k 4
 """
 from __future__ import annotations
 
@@ -42,6 +48,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=64)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged pool size (0 = dense-equivalent worst case)")
+    ap.add_argument("--draft", default=None, choices=["self", "tiny"],
+                    help="speculative decoding draft source: 'self' "
+                    "(self-speculation over the target's own caches) or "
+                    "'tiny' (a smoke-sized flowformer_lm drafter)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="drafted tokens per verify window (0 = plain "
+                    "decode; implies --draft self when unset)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -53,10 +66,13 @@ def main():
     paged = (PagedSpec(page_size=args.page_size, num_pages=args.num_pages)
              if args.paged else None)
     # one ExecutionPlan for the whole serving lifetime: the paged-cache
-    # option and packed admission ride it instead of per-call kwargs
-    plan = plan_of(cfg, paged=paged, packed=True)
+    # option, packed admission and the speculative window ride it instead
+    # of per-call kwargs
+    plan = plan_of(cfg, paged=paged, packed=True,
+                   speculate_k=args.speculate_k)
     engine = Engine(params, cfg, slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8, plan=plan)
+                    max_len=args.prompt_len + args.max_new + 8, plan=plan,
+                    draft=args.draft, speculate_k=args.speculate_k)
     print(f"[serve] attention plan: {engine.worker.plan.describe()}")
     rng = np.random.default_rng(0)
     reqs = []
@@ -79,6 +95,9 @@ def main():
     total_tokens = sum(len(r.generated) for r in reqs)
     print(f"[serve] {args.requests} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/max(dt,1e-9):.1f} tok/s, {steps} steps)")
+    if engine.draft is not None:
+        print(f"[serve] speculative: k={engine.speculate_k}, "
+              f"~{total_tokens/max(steps,1):.2f} tokens committed per step")
     alloc = engine.worker.allocator
     if alloc is not None:
         print(f"[serve] paged KV: page_size={alloc.page_size} "

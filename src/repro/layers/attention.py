@@ -78,18 +78,18 @@ def flow_cfg_of(cfg: ModelConfig, causal: bool) -> FlowConfig:
 
 def plan_of(cfg: ModelConfig, *, causal: bool = True,
             shard: ShardSpec | None = None, paged=None, packed: bool = False,
-            needs_grad: bool = False, platform: str | None = None
-            ) -> ExecutionPlan:
+            needs_grad: bool = False, platform: str | None = None,
+            speculate_k: int = 0) -> ExecutionPlan:
     """Build the model-level ``ExecutionPlan`` ONCE (engine/step
     construction time) instead of re-threading backend pins / ``paged=`` /
     mesh axes as per-call kwargs.  ``flow`` is derived from
     ``cfg.attention``; layers re-derive it per block anyway (hybrid stacks
     flip ``causal``/kind per slot), so the plan's job is carrying the
     execution context: shard placement, packed admission, paged caches,
-    gradient needs."""
+    gradient needs, and the speculative verify window (``speculate_k``)."""
     return ExecutionPlan(flow=flow_cfg_of(cfg, causal), shard=shard,
                          paged=paged, packed=packed, needs_grad=needs_grad,
-                         platform=platform)
+                         platform=platform, speculate_k=speculate_k)
 
 
 @functools.lru_cache(maxsize=64)
@@ -660,6 +660,19 @@ class AttentionMixer(mixer_lib.Mixer):
         return True, ("gradient capability is judged per execution strategy "
                       "by the attention backend registry (needs_grad plans)")
 
+    def verify_capable(self, cfg):
+        sub = self._cfg(cfg)
+        if sub.attention.kind == "local":
+            return False, ("ring buffer overwrites history: a rejected "
+                           "draft cannot be rolled back")
+        if sub.attention.kind == "flow":
+            return True, ("registry verify op: one carry-in pass, "
+                          "trajectory FlowState rollback")
+        if sub.attention.kind == "linear":
+            return True, "trajectory rollback over scanned decode"
+        return True, ("positional cache: rollback is per-slot position "
+                      "arithmetic (stale writes are masked/overwritten)")
+
     def init_params(self, key, cfg):
         return attn_init(key, self._cfg(cfg))
 
@@ -687,6 +700,57 @@ class AttentionMixer(mixer_lib.Mixer):
         return _attention_decode(params, x, state, self._cfg(cfg),
                                  positions=positions, page_table=page_table,
                                  plan=plan)
+
+    def verify_step(self, params, x, state, cfg, *, positions=None,
+                    page_table=None, plan=None):
+        sub = self._cfg(cfg)
+        kind = sub.attention.kind
+        if kind == "local":
+            raise mixer_lib.MixerResolutionError(
+                "local attention cannot satisfy speculative verify — "
+                "missing capability verify_capable: ring buffer overwrites "
+                "history",
+                (("local", "verify_capable", "ring overwrite"),),
+            )
+        if kind == "flow":
+            # one chunked carry-in pass through the registry verify op:
+            # per-position outputs plus the trajectory FlowState (window
+            # axis at index 1) in a single device call
+            q, k, v = _project_qkv(params, x, sub, positions)
+            ex = _flow_executor(sub, True, plan)
+            out, traj = ex.verify_step(state, q, k, v)
+            return dense(params["wo"], _merge_heads(out)), traj
+        if kind == "linear":
+            # constant-size state: the generic scanned-decode trajectory
+            return super().verify_step(params, x, state, cfg,
+                                       positions=positions,
+                                       page_table=page_table, plan=plan)
+        # softmax / MLA / paged: positional caches roll back by position
+        # arithmetic, so stacking n cache snapshots would waste O(n * L)
+        # memory — decode the window sequentially and keep only the final
+        # cache as the pending state
+        outs = []
+        st = state
+        for j in range(x.shape[1]):
+            pos_j = None if positions is None else positions[..., j:j + 1]
+            y, st = self.decode_step(params, x[:, j:j + 1], st, cfg,
+                                     positions=pos_j, page_table=page_table,
+                                     plan=plan)
+            outs.append(y)
+        return jnp.concatenate(outs, axis=1), st
+
+    def select_verified(self, pending, accepted, n, cfg, *, plan=None):
+        sub = self._cfg(cfg)
+        kind = sub.attention.kind
+        if kind in ("flow", "linear"):
+            return super().select_verified(pending, accepted, n, cfg,
+                                           plan=plan)
+        # positional caches (KVCache / MLACache / PagedKVCache): the window
+        # wrote n tokens at positions pos-n..pos-1; accepting a+1 of them
+        # rewinds pos so future decodes overwrite the stale tail, and
+        # kv_len masking keeps it invisible until then
+        acc = accepted.astype(pending.pos.dtype)
+        return pending._replace(pos=pending.pos - (n - acc - 1))
 
 
 class LocalSlotMixer(AttentionMixer):

@@ -15,6 +15,9 @@ it once as canonical ops on a ``Mixer`` record:
     prefill_packed(..., lengths)                  right-padded prompt batch,
                                                   per-row boundary states
     decode_step(params, x, state, cfg, ...)       one token on the state
+    verify_step(params, x, state, cfg, ...)       n drafted tokens -> per-
+                                                  position outputs + pending
+    select_verified(pending, accepted, n, cfg)    accept-prefix rollback
 
 plus capability flags each kind self-reports against a concrete
 ``ModelConfig``:
@@ -25,6 +28,9 @@ plus capability flags each kind self-reports against a concrete
                      (``serving/paged.py``); constant-size states decline
     differentiable — ``jax.grad`` flows through ``forward`` on the given
                      platform
+    verify_capable — the decode state can score a drafted window and roll
+                     back to the accepted prefix (speculative decoding);
+                     overwriting ring buffers decline
 
 ``resolve_mixer(kind, cfg, plan)`` binds a kind to its record with the
 same rejection-reporting contract as ``attention.resolve``: a plan that
@@ -60,10 +66,28 @@ import dataclasses
 import warnings
 
 import jax
+import jax.numpy as jnp
 
 from repro.config import ModelConfig
 
 Array = jax.Array
+
+
+def select_from_trajectory(pending, accepted: Array):
+    """Gather one boundary per batch row from a trajectory state pytree.
+
+    Every leaf of ``pending`` carries a window-position axis at index 1
+    (shape ``(B, n, ...)``); ``accepted`` (B,) int selects, per row, the
+    state after consuming ``accepted+1`` window tokens.  This is the
+    generic accept-prefix rollback for constant-size states — a gather,
+    never a recompute.
+    """
+    def gat(leaf: Array) -> Array:
+        ii = accepted.reshape(
+            (-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.int32)
+        return jnp.take_along_axis(leaf, ii, axis=1)[:, 0]
+
+    return jax.tree_util.tree_map(gat, pending)
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +163,14 @@ class Mixer:
         """(ok, reason) — does ``jax.grad`` flow through ``forward``?"""
         return True, "natively differentiable"
 
+    def verify_capable(self, cfg: ModelConfig):
+        """(ok, reason) — can the decode state score a drafted window and
+        roll back to the accepted prefix (speculative decoding)?  True by
+        default: any kind with ``decode_step`` gets the scanned-decode
+        verify with trajectory rollback; kinds whose caches destroy
+        history (overwriting ring buffers) decline."""
+        return True, "trajectory rollback over scanned decode"
+
     # canonical ops ---------------------------------------------------------
     def init_params(self, key, cfg: ModelConfig) -> dict:
         raise NotImplementedError(f"{self.kind} does not provide init_params")
@@ -168,6 +200,48 @@ class Mixer:
                     positions: Array | None = None,
                     page_table: Array | None = None, plan=None):
         raise NotImplementedError(f"{self.kind} does not provide decode_step")
+
+    def verify_step(self, params, x: Array, state, cfg: ModelConfig, *,
+                    positions: Array | None = None,
+                    page_table: Array | None = None, plan=None):
+        """Score a drafted window of n tokens; return (out, pending).
+
+        ``x`` is (B, n, width): the last committed token plus the drafted
+        candidates.  ``out`` (B, n, width) must match what n sequential
+        ``decode_step`` calls would produce; ``pending`` is whatever
+        ``select_verified`` needs to roll the state to any accepted prefix.
+
+        The default realization IS n sequential ``decode_step`` calls
+        (unrolled: n is a handful by construction) with every intermediate
+        state stacked into a trajectory along axis 1 — correct for any
+        constant-size recurrent state (flow/linear/rglru/ssd).  Kinds with
+        large positional caches override to avoid materializing n cache
+        copies.
+        """
+        n = x.shape[1]
+        outs, traj = [], []
+        st = state
+        for j in range(n):
+            pos_j = None if positions is None else positions[..., j:j + 1]
+            y, st = self.decode_step(params, x[:, j:j + 1], st, cfg,
+                                     positions=pos_j, page_table=page_table,
+                                     plan=plan)
+            outs.append(y)
+            traj.append(st)
+        pending = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves, axis=1), *traj)
+        return jnp.concatenate(outs, axis=1), pending
+
+    def select_verified(self, pending, accepted: Array, n: int,
+                        cfg: ModelConfig, *, plan=None):
+        """Roll the pending verify state to the accepted prefix.
+
+        ``accepted`` (B,) int in [0, n-1]: the per-row index of the last
+        consumed window token (``accepted+1`` tokens advance).  The default
+        pairs with the default ``verify_step``: a trajectory gather.
+        """
+        del n, cfg, plan
+        return select_from_trajectory(pending, accepted)
 
 
 class MixerResolutionError(ValueError):
@@ -237,6 +311,7 @@ class BoundMixer:
         self.packable = mixer.packable(cfg)[0]
         self.paged_capable = mixer.paged_capable(cfg)[0]
         self.differentiable = mixer.differentiable(cfg, platform)[0]
+        self.verify_capable = mixer.verify_capable(cfg)[0]
 
     def init_params(self, key) -> dict:
         return self.mixer.init_params(key, self.cfg)
@@ -277,6 +352,26 @@ class BoundMixer:
                                       positions=positions,
                                       page_table=page_table, plan=self.plan)
 
+    def verify_step(self, params, x: Array, state, *,
+                    positions: Array | None = None,
+                    page_table: Array | None = None):
+        """Score a drafted window; raises the same rejection
+        ``resolve_mixer`` would for a kind without the capability."""
+        ok, why = self.mixer.verify_capable(self.cfg)
+        if not ok:
+            raise MixerResolutionError(
+                f"mixer {self.kind!r} cannot satisfy speculative verify — "
+                f"missing capability verify_capable: {why}",
+                ((self.kind, "verify_capable", why),),
+            )
+        return self.mixer.verify_step(params, x, state, self.cfg,
+                                      positions=positions,
+                                      page_table=page_table, plan=self.plan)
+
+    def select_verified(self, pending, accepted: Array, n: int):
+        return self.mixer.select_verified(pending, accepted, n, self.cfg,
+                                          plan=self.plan)
+
 
 def _plan_demands(plan) -> tuple:
     """((capability, demand-description), ...) a plan places on a mixer."""
@@ -289,6 +384,8 @@ def _plan_demands(plan) -> tuple:
         demands.append(("paged_capable", "paged decode caches"))
     if getattr(plan, "needs_grad", False):
         demands.append(("differentiable", "gradients through forward"))
+    if getattr(plan, "speculate_k", 0):
+        demands.append(("verify_capable", "speculative verify windows"))
     return tuple(demands)
 
 
@@ -368,13 +465,15 @@ def stack_capabilities(cfg: ModelConfig, platform: str | None = None) -> dict:
 
     ``packable`` — every layer packs (serving admission's question);
     ``paged_capable`` — at least one layer can page (is a pool worth
-    allocating at all); ``differentiable`` — every layer trains.  Each
-    verdict pairs with the first offending/supporting (kind, reason)."""
+    allocating at all); ``differentiable`` — every layer trains;
+    ``verify_capable`` — every layer can verify-and-rollback (speculative
+    decoding is all-or-nothing across a stack).  Each verdict pairs with
+    the first offending/supporting (kind, reason)."""
     platform = platform or jax.default_backend()
     kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
     verdicts = {}
     for cap, agg in (("packable", all), ("paged_capable", any),
-                     ("differentiable", all)):
+                     ("differentiable", all), ("verify_capable", all)):
         rows = [(k, *_capability(get_mixer(k), cap, cfg, platform))
                 for k in sorted(kinds)]
         ok = agg(r[1] for r in rows)
@@ -394,5 +493,6 @@ def capability_matrix(cfg: ModelConfig, platform: str | None = None) -> list:
             "packable": m.packable(cfg),
             "paged_capable": m.paged_capable(cfg),
             "differentiable": m.differentiable(cfg, platform),
+            "verify_capable": m.verify_capable(cfg),
         }))
     return rows

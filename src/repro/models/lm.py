@@ -323,3 +323,60 @@ def decode(params, token: Array, caches, cfg: ModelConfig, pos: Array,
     head = params["embed"] if cfg.tie_embeddings else params["head"]
     logits = unembed(head, x, softcap=cfg.logit_softcap)
     return logits, new_caches
+
+
+def verify(params, tokens: Array, caches, cfg: ModelConfig, pos: Array,
+           *, dtype=jnp.bfloat16, page_table: Array | None = None, plan=None):
+    """Score a drafted window of n tokens in one pass (speculative decode).
+
+    tokens: (B, n) int — the last committed token followed by the n-1
+    drafted candidates; ``logits[:, j]`` scores the token at position
+    ``pos + j + 1``, exactly matching n sequential ``decode`` calls.
+    pos: () or (B,) int32 — absolute position of ``tokens[:, 0]`` per slot.
+    Returns (logits (B, n, vocab), pending_caches): the pending caches hold
+    every layer's post-window verify state (trajectories for constant-size
+    states, position-advanced caches for KV layers) — commit the accepted
+    prefix with ``select_verified(pending, accepted, n, cfg)``.
+    """
+    b, n = tokens.shape[0], tokens.shape[1]
+    x = _embed_inputs(params, tokens, cfg, dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    positions = (
+        default_mrope_positions(b, n, pos) if cfg.rope == "mrope"
+        else default_positions(b, n, pos)
+    )
+    pending = []
+    mixers = resolve_mixers(cfg, plan)
+    for i, bp in enumerate(_blocks_list(params, cfg)):
+        mx = mixers[i]
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        y, cache = mx.verify_step(bp[mx.params_field], h, caches[i],
+                                  positions=positions,
+                                  page_table=page_table)
+        pending.append(cache)
+        x = x + y
+        if "ffn" in bp:
+            x = x + ffn(bp["ffn"], apply_norm(bp["norm2"], x, cfg.norm), cfg.act)
+        elif "moe" in bp:
+            y2, _ = moe(bp["moe"], apply_norm(bp["norm2"], x, cfg.norm),
+                        cfg.act, cfg.moe)
+            x = x + y2
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x, softcap=cfg.logit_softcap)
+    return logits, pending
+
+
+def select_verified(pending, accepted: Array, n: int, cfg: ModelConfig,
+                    *, plan=None):
+    """Roll every layer's pending verify state to the accepted prefix.
+
+    accepted: (B,) int in [0, n-1] — the per-row index of the last consumed
+    window token (``accepted + 1`` tokens advance the state).  Returns
+    caches equivalent to having decoded only the accepted tokens.
+    """
+    mixers = resolve_mixers(cfg, plan)
+    return [mx.select_verified(pending[i], accepted, n)
+            for i, mx in enumerate(mixers)]

@@ -1,0 +1,208 @@
+"""Draft sources for speculative decoding.
+
+A ``DraftSource`` proposes ``k`` candidate tokens per live slot each
+engine iteration; the target ``Worker`` then scores the whole window in
+ONE fused ``verify`` call (``lm.verify`` through the attention registry's
+``verify`` op) and commits the accepted prefix plus a bonus/correction
+token.  The engine loop stays two device calls per window — propose and
+verify — instead of one call per token, which is where the speculative
+throughput win comes from: dispatch and sampling overhead amortize over
+``accepted + 1`` tokens.
+
+Two sources ship:
+
+* ``SelfDraft`` — self-speculation: the target model drafts for itself by
+  scanning ``k`` greedy decode steps on a throwaway copy of the worker's
+  own caches (the jit does NOT donate them, so the real pool survives).
+  Greedy slots accept every draft by construction, turning decode into
+  exact multi-token steps; it needs no extra parameters and no extra
+  memory beyond one transient cache copy.
+* ``ModelDraft`` — a separate (typically much smaller) drafter with its
+  own slot-batched cache pool, kept in lockstep with the target: admitted
+  prompts are prefilled into the draft pool, each propose scan records
+  the draft state trajectory, and ``commit`` rolls the draft caches to
+  the target's accepted boundary — the drafter consumes exactly the
+  committed token stream, so acceptance statistics depend only on how
+  well it predicts the target.  ``tiny_draft`` builds a smoke-sized
+  ``flowformer_lm`` drafter for experiments and tests.
+
+Greedy parity is independent of the draft source: every committed token
+comes from the target's own verify logits, so speculative greedy decoding
+emits token-for-token what plain greedy decoding would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+Array = jax.Array
+
+
+class DraftSource:
+    """Lifecycle protocol the engine drives; subclass and override.
+
+    ``install(worker, k)`` binds the source to the target worker's slot
+    pool before serving; per iteration the engine calls ``propose`` then,
+    after the target's verify, ``commit``; ``admit``/``release`` mirror
+    slot admission and retirement for sources that carry per-slot state.
+    """
+
+    def install(self, worker, k: int):
+        """Bind to the target ``Worker`` (slot count, config, dtype)."""
+        self.worker = worker
+        self.k = k
+
+    def admit(self, prompts: list[np.ndarray], slot_ids: list[int]):
+        """A batch of prompts was admitted into ``slot_ids``."""
+
+    def propose(self, tokens: np.ndarray, pos: np.ndarray,
+                live: np.ndarray) -> np.ndarray:
+        """Draft ``(slots, k)`` candidate tokens continuing each slot.
+
+        ``tokens`` (S,) is each slot's last committed token at absolute
+        position ``pos`` (S,); dead slots may return garbage.
+        """
+        raise NotImplementedError
+
+    def commit(self, accepted: np.ndarray, live: np.ndarray):
+        """The target accepted ``accepted[i] + 1`` window tokens per slot."""
+
+    def release(self, slot: int):
+        """Slot retired; drop any per-slot draft state."""
+
+
+class SelfDraft(DraftSource):
+    """Self-speculation: scan k greedy decode steps on a cache copy.
+
+    Stateless between windows — every propose restarts from the worker's
+    (already committed) caches, so no commit/rollback bookkeeping exists
+    to get wrong.  Exact for greedy slots: the drafts ARE the target's
+    greedy continuation, so verify accepts all k and every window commits
+    k+1 tokens in two device calls.
+    """
+
+    def install(self, worker, k: int):
+        super().install(worker, k)
+        cfg, xplan, dtype = worker.cfg, worker.plan, worker.dtype
+
+        def propose_fn(params, tok, caches, pos, table):
+            def body(carry, _):
+                tok, caches, pos = carry
+                logits, caches = lm.decode(params, tok, caches, cfg, pos,
+                                           page_table=table, plan=xplan,
+                                           dtype=dtype)
+                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                                 axis=-1).astype(jnp.int32)
+                return (nxt[:, None], caches, pos + 1), nxt
+
+            _, drafts = jax.lax.scan(body, (tok, caches, pos), None,
+                                     length=k)
+            return drafts.T  # (S, k)
+
+        # no donation: the worker's cache buffers must survive the scan
+        self._propose = jax.jit(propose_fn)
+
+    def propose(self, tokens, pos, live):
+        w = self.worker
+        table = None
+        if w.allocator is not None:
+            # draft decodes write (throwaway) K/V at pos .. pos+k-1; the
+            # pages must be mapped so reads gather real context
+            for slot in np.flatnonzero(live):
+                w.allocator.ensure(int(slot), int(pos[slot]) + self.k - 1)
+            table = jnp.asarray(w.allocator.table)
+        drafts = self._propose(w.params,
+                               jnp.asarray(tokens, jnp.int32)[:, None],
+                               w.caches, jnp.asarray(pos, jnp.int32), table)
+        return np.asarray(drafts)
+
+
+class ModelDraft(DraftSource):
+    """A separate drafter model with its own slot-batched cache pool.
+
+    The drafter consumes exactly the committed token stream: ``admit``
+    prefills prompts into the draft pool, ``propose`` scans ``k + 1``
+    greedy draft steps recording the state trajectory, and ``commit``
+    gathers the trajectory at the target's accepted boundary — the
+    drafter's feed ``[last, d_1 .. d_a]`` equals the target's committed
+    window, so the pools never drift.  Constant-size decode states
+    (flow / linear / rglru / ssd) make the trajectory cheap; use a
+    KV-cache drafter only if you enjoy copying caches k+1 times.
+    """
+
+    def __init__(self, params, cfg, *, dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.dtype = dtype
+        self._pending = None
+
+    def install(self, worker, k: int):
+        from repro.serving.worker import Worker
+
+        super().install(worker, k)
+        self.pool = Worker(self.params, self.cfg, slots=worker.slots,
+                           max_len=worker.max_len, dtype=self.dtype)
+        cfg, xplan, dtype = self.cfg, self.pool.plan, self.dtype
+
+        def propose_fn(params, tok, caches, pos):
+            def body(carry, _):
+                tok, caches, pos = carry
+                logits, caches = lm.decode(params, tok, caches, cfg, pos,
+                                           plan=xplan, dtype=dtype)
+                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                                 axis=-1).astype(jnp.int32)
+                return (nxt[:, None], caches, pos + 1), (nxt, caches)
+
+            # k+1 steps: k drafts plus the state past the full window, so
+            # commit can gather any accepted boundary in [0, k]
+            _, (drafts, traj) = jax.lax.scan(body, (tok, caches, pos), None,
+                                             length=k + 1)
+            return drafts[:k].T, traj
+
+        def commit_fn(traj, accepted):
+            # traj leaves are (k+1, S, ...): state after 1..k+1 consumed
+            # window tokens; accepted indexes the target's boundary
+            return jax.tree_util.tree_map(
+                lambda leaf: leaf[accepted, jnp.arange(leaf.shape[1])], traj)
+
+        self._propose = jax.jit(propose_fn)
+        self._commit = jax.jit(commit_fn)
+
+    def admit(self, prompts, slot_ids):
+        # the draft pool samples its own (discarded) first tokens; the
+        # committed first token arrives as `tokens` at the next propose
+        self.pool.prefill(prompts, slot_ids,
+                          np.zeros(len(prompts), np.float32))
+
+    def propose(self, tokens, pos, live):
+        drafts, self._pending = self._propose(
+            self.pool.params, jnp.asarray(tokens, jnp.int32)[:, None],
+            self.pool.caches, jnp.asarray(pos, jnp.int32))
+        return np.asarray(drafts)
+
+    def commit(self, accepted, live):
+        if self._pending is None:
+            return
+        self.pool.caches = self._commit(self._pending,
+                                        jnp.asarray(accepted, jnp.int32))
+        self._pending = None
+
+
+def tiny_draft(cfg, *, seed: int = 0, dtype=jnp.float32) -> ModelDraft:
+    """A smoke-sized ``flowformer_lm`` drafter matched to ``cfg``'s vocab.
+
+    Random-initialized (useful for plumbing tests and as a starting point
+    — train it or distill from the target for real acceptance rates).
+    """
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+
+    dcfg = get_smoke_config("flowformer_lm")
+    dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size,
+                               max_seq_len=cfg.max_seq_len)
+    params = lm.init(jax.random.PRNGKey(seed), dcfg)
+    return ModelDraft(params, dcfg, dtype=dtype)

@@ -40,9 +40,12 @@ architectures.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.serving.draft import DraftSource, SelfDraft
 from repro.serving.paged import PagedSpec
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.worker import Worker
@@ -51,46 +54,96 @@ __all__ = ["Engine", "Request", "PagedSpec"]
 
 
 class Engine:
-    """Single-host reference engine (the distributed serve_step shares the
-    same prefill/decode jit functions via launch/steps.py)."""
+    """Single-host reference engine.
+
+    The distributed ``serve_step`` shares the same prefill/decode jit
+    functions via ``launch/steps.py``; this class is the scheduler/worker
+    facade everything local (benchmarks, examples, tests) drives.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 4096, seed: int = 0,
                  paged: PagedSpec | bool | None = None, plan=None,
-                 dtype=None):
-        """``plan`` (an ``attention.ExecutionPlan``) carries the serving
+                 dtype=None, draft: DraftSource | str | None = None,
+                 speculate_k: int = 0):
+        """Build the scheduler/worker pair (and optionally a draft source).
+
+        ``plan`` (an ``attention.ExecutionPlan``) carries the serving
         execution context built once by the caller; ``paged=`` remains as
         facade sugar and is folded into the worker's plan.  ``dtype``
-        overrides the serving activation dtype (default bfloat16)."""
+        overrides the serving activation dtype (default bfloat16).
+
+        ``draft`` + ``speculate_k`` switch the hot loop to speculative
+        decoding: each iteration the draft source proposes ``speculate_k``
+        tokens per slot and one fused verify commits each slot's accepted
+        prefix plus a bonus token (variable tokens per step per slot).
+        ``draft`` may be ``"self"`` (self-speculation over the target's
+        own caches), ``"tiny"`` (a smoke-sized ``flowformer_lm`` drafter)
+        or any ``serving.draft.DraftSource``; giving one without
+        ``speculate_k`` defaults the window to 4, and ``speculate_k``
+        alone defaults the source to ``"self"``.  Greedy generations are
+        token-for-token identical to plain decode.
+        """
+        if draft is not None and speculate_k == 0:
+            speculate_k = 4
+        if speculate_k and draft is None:
+            draft = "self"
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
+        self.speculate_k = speculate_k
         if paged is True:
             paged = PagedSpec()
+        if speculate_k:
+            # the plan's speculate_k makes mixer resolution demand the
+            # verify_capable capability at build time (and the registry
+            # triage the verify op), so an unservable stack fails here
+            from repro.layers.attention import plan_of
+
+            plan = dataclasses.replace(plan or plan_of(cfg),
+                                       speculate_k=speculate_k)
         self.scheduler = Scheduler(slots)
         kw = {} if dtype is None else {"dtype": dtype}
         self.worker = Worker(params, cfg, slots=slots, max_len=max_len,
                              paged=paged or None, seed=seed, plan=plan, **kw)
+        if draft == "self":
+            draft = SelfDraft()
+        elif draft == "tiny":
+            from repro.serving.draft import tiny_draft
+
+            draft = tiny_draft(cfg, seed=seed)
+        elif isinstance(draft, str):
+            raise ValueError(
+                f"unknown draft source {draft!r}: pass 'self', 'tiny' or a "
+                "serving.draft.DraftSource instance")
+        self.draft = draft
+        if draft is not None:
+            draft.install(self.worker, speculate_k)
 
     # -- facade conveniences (examples/tests poke at these) -------------
     @property
     def queue(self):
+        """The scheduler's FIFO admission queue."""
         return self.scheduler.queue
 
     @property
     def active(self):
+        """The scheduler's slot table (``Request | None`` per slot)."""
         return self.scheduler.active
 
     @property
     def pos(self):
+        """(slots,) positions consumed per slot (host copy)."""
         return self.scheduler.pos
 
     @property
     def caches(self):
+        """The worker's device-resident cache pool."""
         return self.worker.caches
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Enqueue a request for admission on a future ``step()``."""
         self.scheduler.submit(req)
 
     def _admit(self):
@@ -100,7 +153,8 @@ class Engine:
         by its prefill-sampled token retires WITHOUT occupying its slot,
         and the freed slot is re-offered to the queue in the same call (no
         one-step slot leak).  Each round is one packed prefill + one
-        scatter install + one batched first-token sample."""
+        scatter install + one batched first-token sample.
+        """
         sched, worker = self.scheduler, self.worker
         while True:
             free = sched.free_slots()
@@ -111,9 +165,12 @@ class Engine:
                 req = sched.queue[0]
                 # reserve the request's whole span (prompt + decode budget)
                 # so an admitted request can never exhaust the pool
-                # mid-decode; the engine contract caps it at max_len
-                span = min(len(req.prompt) + req.max_new_tokens - 1,
-                           self.max_len)
+                # mid-decode; speculative windows write up to speculate_k
+                # positions of lookahead past the committed boundary, so
+                # their rows reserve it too; the engine contract caps the
+                # span at max_len
+                span = min(len(req.prompt) + req.max_new_tokens - 1
+                           + self.speculate_k, self.max_len)
                 if worker.pages_needed(span) > worker.total_pages:
                     if batch:
                         # admit the requests collected so far first; the
@@ -142,11 +199,16 @@ class Engine:
             temps = np.array([r.temperature for r in batch], np.float32)
             first = worker.prefill([r.prompt for r in batch], slot_ids, temps,
                                    spans=spans)
+            if self.draft is not None:
+                self.draft.admit([r.prompt for r in batch], slot_ids)
             for req, slot, tok in zip(batch, slot_ids, first):
                 req.generated.append(int(tok))
-                if len(req.generated) >= req.max_new_tokens:
-                    # budget met by the prefill token: retire immediately;
-                    # the slot stays free and the outer loop re-offers it
+                if (len(req.generated) >= req.max_new_tokens
+                        or (req.eos_id is not None
+                            and int(tok) == req.eos_id)):
+                    # budget met (or EOS) by the prefill token: retire
+                    # immediately; the slot stays free and the outer loop
+                    # re-offers it
                     sched.retire(req)
                     worker.release_slot(slot)
                 else:
@@ -154,27 +216,48 @@ class Engine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One continuous-batching iteration; returns #active slots."""
+        """One continuous-batching iteration; returns #active slots.
+
+        Plain engines run one fused decode+sample (one token per live
+        slot); speculative engines run propose + one fused verify and
+        commit a *variable* number of tokens per slot — each slot's
+        accepted draft prefix plus its bonus token.
+        """
         self._admit()
         sched = self.scheduler
         live = sched.live_mask()
         n_live = int(live.sum())
         if n_live == 0:
             return 0
-        tokens = self.worker.step(sched.last_tokens(), sched.pos,
-                                  sched.temps, live)
-        for slot in sched.record_step(tokens, live):
+        if self.draft is None:
+            tokens = self.worker.step(sched.last_tokens(), sched.pos,
+                                      sched.temps, live)
+            freed = sched.record_step(tokens, live)
+        else:
+            drafts = self.draft.propose(sched.last_tokens(), sched.pos, live)
+            emitted, accepted = self.worker.verify(
+                sched.last_tokens(), drafts, sched.pos, sched.temps, live)
+            self.draft.commit(accepted, live)
+            freed = sched.record_verify(emitted, accepted, live)
+        for slot in freed:
             self.worker.release_slot(slot)
+            if self.draft is not None:
+                self.draft.release(slot)
         return n_live
 
     def take_finished(self) -> list[Request]:
-        """Drain retired requests (keeps engine memory bounded over a long
-        serving lifetime — retirees are held only until collected)."""
+        """Drain retired requests.
+
+        Keeps engine memory bounded over a long serving lifetime —
+        retirees are held only until collected.
+        """
         return self.scheduler.take_finished()
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        """Drive the loop until every queued request retires (or max_steps);
-        drains and returns the retired requests, in retirement order."""
+        """Drive the loop until every queued request retires (or max_steps).
+
+        Drains and returns the retired requests, in retirement order.
+        """
         for _ in range(max_steps):
             n = self.step()
             if n == 0 and not self.queue:

@@ -61,7 +61,8 @@ def sample_tokens(key, logits: Array, temps: Array, live: Array) -> Array:
     (S,) bool.  Greedy and temperature slots share one batched
     ``jax.random.categorical`` (the categorical draw is computed for every
     row; greedy rows select the argmax instead — no per-slot branching,
-    no per-slot host syncs)."""
+    no per-slot host syncs).
+    """
     if logits.ndim == 3:  # normalize shape once, both sampling modes agree
         logits = logits[:, -1]
     logits = logits.astype(jnp.float32)
@@ -73,15 +74,20 @@ def sample_tokens(key, logits: Array, temps: Array, live: Array) -> Array:
 
 
 def _packable(cfg: ModelConfig) -> bool:
-    """Can prompts be right-padded into one prefill call?  The mixer
-    registry answers: every layer's kind must report the ``packable``
-    capability (per-row boundary states from one padded call)."""
+    """Can prompts be right-padded into one prefill call?
+
+    The mixer registry answers: every layer's kind must report the
+    ``packable`` capability (per-row boundary states from one padded call).
+    """
     return stack_capabilities(cfg)["packable"][0]
 
 
 def _has_pageable_layers(cfg: ModelConfig) -> bool:
-    """Is a paged pool worth allocating?  True when at least one layer's
-    mixer can serve from it (dense softmax KV caches)."""
+    """Is a paged pool worth allocating?
+
+    True when at least one layer's mixer can serve from it (dense softmax
+    KV caches).
+    """
     return stack_capabilities(cfg)["paged_capable"][0]
 
 
@@ -97,9 +103,11 @@ def _bucket_len(n: int, max_len: int) -> int:
 # One-scatter slot install
 # ---------------------------------------------------------------------------
 def _install_layer(dst, src, slot_ids, pids, offs):
-    """Scatter an admission batch's layer cache (R rows) into the slot-wide
-    pool.  Out-of-range slot ids / sentinel page ids drop, so callers can
-    pad the admission batch freely."""
+    """Scatter an admission batch's layer cache into the slot-wide pool.
+
+    Out-of-range slot ids / sentinel page ids drop, so callers can pad
+    the admission batch (R rows) freely.
+    """
     if isinstance(dst, PagedKVCache):
         # src is the dense (R, Hkv, L, D) prefill cache; flatten into pages
         l = src.k.shape[2]
@@ -147,17 +155,22 @@ def _install(caches, new, slot_ids, pids, offs):
 # Worker
 # ---------------------------------------------------------------------------
 class Worker:
-    """Owns params + the device-resident cache pool; every method that
-    touches the device is one jitted call."""
+    """The device data plane: params plus the slot-batched cache pool.
+
+    Every method that touches the device is one jitted call.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
                  paged: PagedSpec | None = None, seed: int = 0,
                  plan: ExecutionPlan | None = None, dtype=jnp.bfloat16):
-        """``dtype`` — serving activation dtype (default bfloat16; fp32
+        """Build the cache pool, the serving plan and the jitted hot-path fns.
+
+        ``dtype`` — serving activation dtype (default bfloat16; fp32
         makes engine generations bit-comparable to an fp32 per-request
         oracle, which parity tests use: bf16's ~8 mantissa bits round
         differently across the packed batch's matmul shapes and can flip a
-        near-tied greedy argmax)."""
+        near-tied greedy argmax).
+        """
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -181,6 +194,7 @@ class Worker:
         xplan = self.plan
 
         def step_fn(params, tok, caches, pos, table, temps, live, key, draw):
+            """Fused decode+sample for the whole slot pool (one jit call)."""
             logits, caches = lm.decode(params, tok, caches, cfg, pos,
                                        page_table=table, plan=xplan,
                                        dtype=dtype)
@@ -190,6 +204,7 @@ class Worker:
 
         def prefill_fn(params, toks, lens, slot_ids, caches, pids, offs,
                        temps, key, draw):
+            """Packed prefill + scatter install + first-token sample."""
             logits, new = lm.prefill(params, toks, cfg,
                                      max_len=toks.shape[1], lengths=lens,
                                      plan=xplan, dtype=dtype)
@@ -201,6 +216,7 @@ class Worker:
 
         def prefill_one_fn(params, toks, slot_ids, caches, pids, offs,
                            temps, key, draw):
+            """Single-prompt prefill for stacks that cannot pack."""
             logits, new = lm.prefill(params, toks, cfg, max_len=max_len,
                                      plan=xplan, dtype=dtype)
             caches = _install(caches, new, slot_ids, pids, offs)
@@ -208,9 +224,44 @@ class Worker:
                                   logits, temps, jnp.ones(1, bool))
             return first, caches
 
+        def verify_fn(params, toks, caches, pos, table, temps, live, key,
+                      draw):
+            """Fused speculative verify: score, accept, sample, roll back."""
+            # one chunked pass scores the whole drafted window: toks[:, 0]
+            # is each slot's last committed token, toks[:, 1:] the drafts
+            n = toks.shape[1]
+            logits, pending = lm.verify(params, toks, caches, cfg, pos,
+                                        page_table=table, plan=xplan,
+                                        dtype=dtype)
+            logits = logits.astype(jnp.float32)
+            greedy = jnp.argmax(logits, axis=-1)  # (S, n)
+            drafts = toks[:, 1:]
+            match = (greedy[:, :-1] == drafts).astype(jnp.int32)
+            accepted = jnp.cumprod(match, axis=1).sum(axis=1)  # (S,) [0, n-1]
+            # temperature slots fall back to accept-0 so every emitted
+            # token is properly sampled — greedy-match acceptance is only
+            # distribution-exact for greedy slots
+            accepted = jnp.where(temps > 0, 0, accepted)
+            # ONE batched draw for the bonus/correction token, sampled from
+            # the verify logits at each slot's own boundary
+            bonus_logits = jnp.take_along_axis(
+                logits, accepted[:, None, None], axis=1)[:, 0]
+            bonus = sample_tokens(jax.random.fold_in(key, draw),
+                                  bonus_logits, temps, live)
+            j = jnp.arange(n)[None, :]
+            padded = jnp.pad(drafts, ((0, 0), (0, 1)))
+            emitted = jnp.where(j < accepted[:, None], padded, 0)
+            emitted = jnp.where(j == accepted[:, None], bonus[:, None],
+                                emitted)
+            emitted = jnp.where(live[:, None], emitted, 0)
+            caches = lm.select_verified(pending, accepted, n, cfg,
+                                        plan=xplan)
+            return emitted, accepted, caches
+
         self._step = jax.jit(step_fn, donate_argnums=(2,))
         self._prefill = jax.jit(prefill_fn, donate_argnums=(4,))
         self._prefill_one = jax.jit(prefill_one_fn, donate_argnums=(3,))
+        self._verify = jax.jit(verify_fn, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     def _next_draw(self) -> int:
@@ -218,22 +269,28 @@ class Worker:
         return self._draws
 
     def pages_needed(self, length: int) -> int:
+        """Pages a ``length``-token span occupies (0 for unpaged pools)."""
         if self.allocator is None:
             return 0
         return pages_for(max(length, 1), self.allocator.page_size)
 
     @property
     def total_pages(self) -> int:
+        """Size of the paged pool in pages (0 for unpaged engines)."""
         return self.allocator.num_pages if self.allocator else 0
 
     def can_admit(self, length: int, reserved: int = 0) -> bool:
-        """``reserved`` accounts for pages already promised to earlier
+        """Whether the paged pool can take a ``length``-token reservation.
+
+        ``reserved`` accounts for pages already promised to earlier
         requests of the same admission batch (allocation happens at
-        prefill, after the whole batch is planned)."""
+        prefill, after the whole batch is planned).
+        """
         return (self.allocator is None or
                 self.allocator.free_pages >= reserved + self.pages_needed(length))
 
     def release_slot(self, slot: int):
+        """Return a retired slot's pages to the free list (if paged)."""
         if self.allocator is not None:
             self.allocator.release(slot)
 
@@ -241,12 +298,14 @@ class Worker:
     def prefill(self, prompts: list[np.ndarray], slot_ids: list[int],
                 temps: np.ndarray, *, spans: list[int] | None = None
                 ) -> np.ndarray:
-        """Admit a batch of prompts into ``slot_ids``; returns their first
-        sampled tokens (one host transfer for the whole batch).
+        """Admit a batch of prompts into ``slot_ids``.
 
-        ``spans`` — per-request page reservation in tokens (prompt + decode
-        budget); pages for the whole span are mapped up front so an
-        admitted request can never exhaust the pool mid-decode."""
+        Returns their first sampled tokens (one host transfer for the
+        whole batch).  ``spans`` — per-request page reservation in tokens
+        (prompt + decode budget); pages for the whole span are mapped up
+        front so an admitted request can never exhaust the pool
+        mid-decode.
+        """
         lens = [len(p) for p in prompts]
         if self.allocator is not None:
             for slot, span in zip(slot_ids, spans or lens):
@@ -303,3 +362,34 @@ class Worker:
             self._key, self._next_draw(),
         )
         return np.asarray(toks)  # the step's single host transfer
+
+    # ------------------------------------------------------------------
+    def verify(self, tokens: np.ndarray, drafts: np.ndarray,
+               pos: np.ndarray, temps: np.ndarray, live: np.ndarray):
+        """One fused speculative verify+sample over the whole slot pool.
+
+        tokens: (S,) last committed token per slot; drafts: (S, k) drafted
+        candidates; pos: (S,) absolute position of ``tokens``.  Returns
+        ``(emitted (S, k+1), accepted (S,))``: each live slot's committed
+        window — its accepted draft prefix then the bonus/correction token
+        at index ``accepted[i]`` — with caches already rolled back to the
+        accepted boundary.  One device call and one host transfer per
+        window, regardless of slot count or k.
+        """
+        k = drafts.shape[1]
+        table = None
+        if self.allocator is not None:
+            # the window writes positions pos .. pos+k per slot
+            for slot in np.flatnonzero(live):
+                self.allocator.ensure(int(slot), int(pos[slot]) + k)
+            table = jnp.asarray(self.allocator.table)
+        toks = np.concatenate(
+            [np.asarray(tokens, np.int32)[:, None],
+             np.asarray(drafts, np.int32)], axis=1)
+        emitted, accepted, self.caches = self._verify(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(pos, jnp.int32), table,
+            jnp.asarray(temps, jnp.float32), jnp.asarray(live),
+            self._key, self._next_draw(),
+        )
+        return np.asarray(emitted), np.asarray(accepted)
