@@ -15,10 +15,19 @@ state decode throughput per (variant, slots, context) cell:
     the SequenceMixer registry through the SAME engine (packed admission
     included); their decode must stay as context-flat as flow's.
 
+  * ``flow_q8`` / ``paged_q8`` / ``hybrid_rg_q8`` — the same engines with
+    int8-quantized state pools (``state_dtype="int8"``): low-bit payload
+    plus fp32 per-(slot, head) scales, decode through the quant-capable
+    kernel variants.
+
 Cells are named ``serve_<ctx>`` so ``regression_gate.py`` sweeps them with
 the same tolerance machinery as the training/inference cells, and every
 row gets a ``trend_vs_ctx`` column — throughput ratio shortest/longest
 context (1.0 = perfectly flat), printed as the per-length trend summary.
+Every row also reports its pool footprint: ``kb_slot`` (state KiB per
+slot at the longest context) and ``tps_per_gb`` (tokens/s per GiB of
+state pool — slots x throughput per HBM byte, the capacity-density
+figure the quantized rows triple).
 
     python -m benchmarks.serving_bench
     python -m benchmarks.serving_bench --slots 2,4 --ctxs 64,128 --steps 24
@@ -38,20 +47,35 @@ from repro.models import lm
 from repro.serving.engine import Engine, PagedSpec, Request
 
 
+def pool_slot_kb(caches, slots: int) -> float:
+    """HBM KiB of serving state per slot, summed over every layer pool.
+
+    Quantized pools count payload + scales (the scales are the per-(slot,
+    head) fp32 columns, a rounding error next to the panel/KV payload).
+    """
+    from repro.serving.quant import pool_bytes
+
+    return pool_bytes(caches) / slots / 1024.0
+
+
 def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
-                paged: PagedSpec | None, speculate_k: int = 0):
+                paged: PagedSpec | None, speculate_k: int = 0,
+                state_dtype: str | None = None):
     """Steady-state decode tokens/s with every slot live at context ctx.
 
     Counts *committed* tokens (identical to steps x slots for plain
     decode; each slot's accepted prefix + bonus token under speculation),
     so speculative rows report accepted tokens/s.  Returns (tokens/s,
-    mean committed tokens per slot-step) — the latter is ``accept_len``,
-    1.0 for plain decode and up to ``speculate_k + 1`` for speculation."""
+    mean committed tokens per slot-step, state-pool KiB per slot) — the
+    second is ``accept_len``, 1.0 for plain decode and up to
+    ``speculate_k + 1`` for speculation."""
     # the serving ExecutionPlan, built once per engine like launch/serve.py
-    plan = plan_of(cfg, paged=paged, packed=True, speculate_k=speculate_k)
+    plan = plan_of(cfg, paged=paged, packed=True, speculate_k=speculate_k,
+                   state_dtype=state_dtype)
     budget = (steps + 2) * (speculate_k + 1)
     engine = Engine(params, cfg, slots=slots, max_len=ctx + budget + 8,
                     plan=plan, speculate_k=speculate_k)
+    kb_slot = pool_slot_kb(engine.worker.caches, slots)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(slots):
@@ -68,7 +92,7 @@ def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
         engine.step()
     dt = time.time() - t0
     tokens = sum(len(r.generated) for r in reqs) - count0
-    return tokens / dt, tokens / (steps * slots)
+    return tokens / dt, tokens / (steps * slots), kb_slot
 
 
 def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
@@ -90,36 +114,60 @@ def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
         ssd=SSDConfig(d_state=32, expand=2, head_dim=32, conv_width=4,
                       chunk_size=32),
     )
-    variants = [("flow", with_kind(base, "flow"), None, 0),
-                ("softmax", with_kind(base, "softmax"), None, 0),
-                ("paged", with_kind(base, "softmax"), page, 0),
-                ("hybrid_rg", hybrid_rg, None, 0),
-                ("hybrid_m2", hybrid_m2, None, 0),
+    variants = [("flow", with_kind(base, "flow"), None, 0, None),
+                ("softmax", with_kind(base, "softmax"), None, 0, None),
+                ("paged", with_kind(base, "softmax"), page, 0, None),
+                ("hybrid_rg", hybrid_rg, None, 0, None),
+                ("hybrid_m2", hybrid_m2, None, 0, None),
+                # quantized state pools: int8 payload + fp32 per-(slot,
+                # head) scales — same engines, ~1/4 the pool HBM; the
+                # density column (tokens/s per pool GiB) is the serving
+                # capacity claim these rows exist for
+                ("flow_q8", with_kind(base, "flow"), None, 0, "int8"),
+                ("paged_q8", with_kind(base, "softmax"), page, 0, "int8"),
+                ("hybrid_rg_q8", hybrid_rg, None, 0, "int8"),
                 # speculative variants: self-speculation drafts are the
                 # target's own greedy continuation, so every window
                 # accepts all k drafts — these rows measure the pure
                 # dispatch/sampling amortization win of committing k+1
                 # tokens per engine iteration (accepted tokens/s)
-                ("spec_flow", with_kind(base, "flow"), None, 4),
-                ("spec_hybrid_rg", hybrid_rg, None, 4)]
+                ("spec_flow", with_kind(base, "flow"), None, 4, None),
+                ("spec_hybrid_rg", hybrid_rg, None, 4, None)]
     rows = {}
-    for name, cfg, paged, spec_k in variants:
+    for name, cfg, paged, spec_k, sdt in variants:
         params = lm.init(jax.random.PRNGKey(0), cfg)
         for s in slots:
             row = {}
             for ctx in ctxs:
-                tps, alen = _bench_cell(params, cfg, slots=s, ctx=ctx,
-                                        steps=steps, paged=paged,
-                                        speculate_k=spec_k)
+                tps, alen, kb_slot = _bench_cell(
+                    params, cfg, slots=s, ctx=ctx, steps=steps, paged=paged,
+                    speculate_k=spec_k, state_dtype=sdt)
                 row[f"serve_{ctx}"] = round(tps, 2)
+            # pool accounting from the largest-context cell (dense KV
+            # pools grow with max_len; flow/hybrid pools don't care):
+            # KiB of state per slot, and the density figure — tokens/s
+            # per GiB of state pool, i.e. slots x throughput per HBM byte
+            row["kb_slot"] = round(kb_slot, 1)
+            row["tps_per_gb"] = round(tps / (kb_slot * s / 2**20), 1)
             row["trend_vs_ctx"] = round(
                 row[f"serve_{ctxs[0]}"] / max(row[f"serve_{ctxs[-1]}"], 1e-9),
                 2)
             if spec_k:
                 row["accept_len"] = round(alen, 2)
             rows[f"{name}[s{s}]"] = row
-    cols = [f"serve_{c}" for c in ctxs] + ["trend_vs_ctx", "accept_len"]
+    cols = [f"serve_{c}" for c in ctxs] + ["kb_slot", "tps_per_gb",
+                                           "trend_vs_ctx", "accept_len"]
     print_table("Serving: decode tokens/s by slots x context", rows, cols)
+    for name in rows:
+        if name.startswith(("flow_q8", "paged_q8", "hybrid_rg_q8")):
+            full = rows.get(name.replace("_q8", ""), {})
+            q8 = rows[name]
+            if full:
+                print(f"[quant]   {name:18s} pool x"
+                      f"{full['kb_slot'] / max(q8['kb_slot'], 1e-9):.2f} "
+                      "smaller, density x"
+                      f"{q8['tps_per_gb'] / max(full['tps_per_gb'], 1e-9):.2f}"
+                      " vs full precision")
     print("\n[trend] decode throughput ratio ctx "
           f"{ctxs[0]} -> {ctxs[-1]} (1.0 = flat in context length):")
     for name, row in rows.items():

@@ -66,7 +66,30 @@ def _check_state_ops(cfg: FlowConfig, op: str):
     return None
 
 
-class XlaCumsum(Backend):
+def _verify_quant(platform: str, dtype: str):
+    """Shared ``quant_capable(op="verify")`` verdict for the chunked-verify
+    strategies: ``pipeline.causal_verify`` dequantizes the pooled carry-in
+    once at entry and the whole drafted window runs fp32, so any platform
+    that can store the pool can verify from it."""
+    from repro.serving.quant import platform_support
+
+    ok, why = platform_support(dtype, platform)
+    if not ok:
+        return False, why
+    return True, f"boundary dequantize into the fp32 carry-in verify ({why})"
+
+
+class _ChunkedVerifyQuant:
+    """Mixin: the chunked-verify backends serve quantized pools for the
+    ``verify`` op (dequantize-at-entry, see ``_verify_quant``)."""
+
+    def quant_capable(self, platform, dtype, op="decode"):
+        if op == "verify":
+            return _verify_quant(platform, dtype)
+        return super().quant_capable(platform, dtype, op)
+
+
+class XlaCumsum(_ChunkedVerifyQuant, Backend):
     """Pure-XLA reference strategy: plain sums (non-causal) or full-length
     cumsums (causal).  Always applicable — the resolution floor."""
 
@@ -101,7 +124,7 @@ class XlaCumsum(Backend):
                                        return_state=True, lengths=lengths)
 
 
-class XlaChunked(Backend):
+class XlaChunked(_ChunkedVerifyQuant, Backend):
     """Causal aggregation as a lax.scan over MXU-friendly chunks (absorbed
     from the former ``core/chunked.py``)."""
 
@@ -142,7 +165,7 @@ class XlaChunked(Backend):
                                        return_state=True, lengths=lengths)
 
 
-class PallasChunk(Backend):
+class PallasChunk(_ChunkedVerifyQuant, Backend):
     """Causal aggregation via the ``kernels/flow_chunk`` Pallas TPU kernel
     (carried (D,Dv) state in VMEM scratch).  Differentiable through the
     ``attention/vjp.py`` custom VJP (Pallas backward kernels)."""
@@ -215,7 +238,7 @@ class PallasNC(Backend):
         return flow_attention_nc_pallas(q, k, v, cfg)
 
 
-class PallasFused(Backend):
+class PallasFused(_ChunkedVerifyQuant, Backend):
     """The whole strict-causal pipeline in one Pallas kernel
     (``kernels/flow_fused``): flows, conservation, cumulative competition
     and aggregation per grid step, FlowState carried in VMEM scratch.  One
@@ -315,8 +338,27 @@ class Recurrent(Backend):
         k, v = pipeline.expand_kv(q, k, v, cfg)
         return recurrent.forward_by_scan(q, k, v, cfg, return_state=True)
 
+    def quant_capable(self, platform, dtype, op="decode"):
+        if op != "decode":
+            return super().quant_capable(platform, dtype, op)
+        from repro.serving.quant import platform_support
+
+        ok, why = platform_support(dtype, platform)
+        if not ok:
+            return False, why
+        return True, f"dequantize -> fp32 recurrence -> requantize ({why})"
+
     def decode_step(self, state, q, k, v, cfg):
+        from repro.serving.quant import QuantizedPool, dequantize_state, \
+            quantize_like
+
         k, v = pipeline.expand_kv(q, k, v, cfg)
+        if isinstance(state, QuantizedPool):
+            # the XLA oracle for the quantized hot path: same per-(slot,
+            # head) scale granularity as the fused kernel, update in fp32
+            new, out = recurrent.decode_step(dequantize_state(state),
+                                             q, k, v, cfg)
+            return quantize_like(state, new), out
         return recurrent.decode_step(state, q, k, v, cfg)
 
 
@@ -339,10 +381,27 @@ class PallasDecode(Backend):
             return False, "Pallas compiles on TPU only (interpret mode must be selected explicitly)"
         return True, "batched pallas decode kernel"
 
+    def quant_capable(self, platform, dtype, op="decode"):
+        if op != "decode":
+            return super().quant_capable(platform, dtype, op)
+        from repro.serving.quant import platform_support
+
+        ok, why = platform_support(dtype, platform)
+        if not ok:
+            return False, why
+        return True, ("in-kernel dequantize/fp32-accumulate/requantize "
+                      f"({why})")
+
     def decode_step(self, state, q, k, v, cfg):
-        from repro.kernels.flow_decode import flow_decode_step
+        from repro.serving.quant import QuantizedPool
 
         k, v = pipeline.expand_kv(q, k, v, cfg)
+        if isinstance(state, QuantizedPool):
+            from repro.kernels.flow_decode import flow_decode_q_step
+
+            return flow_decode_q_step(state, q, k, v, cfg)
+        from repro.kernels.flow_decode import flow_decode_step
+
         return flow_decode_step(state, q, k, v, cfg)
 
 

@@ -113,7 +113,14 @@ def causal_verify(state, q: Array, k: Array, v: Array, cfg: FlowConfig,
     """
     del dot_fn  # in-window aggregation is cumsum-sized by construction
     from repro.attention.recurrent import FlowState
+    from repro.serving.quant import QuantizedPool, dequantize_state
 
+    if isinstance(state, QuantizedPool):
+        # quantized slot pools verify in full precision: one boundary
+        # dequantize here, and the caller (mixer verify_step) carries the
+        # pool's recipe alongside the fp32 trajectory so rollback
+        # requantizes exactly once at the accepted boundary
+        state = dequantize_state(state)
     out_dtype = q.dtype
     eps = cfg.eps
     b, hq, n, d = q.shape

@@ -38,6 +38,21 @@ from repro.attention.registry import Backend, ShapeInfo, ShardSpec
 
 Array = jax.Array
 
+_QUANT_DTYPES = ("int8", "fp8")
+
+
+def _quant_of(plan, op: str) -> str | None:
+    """The quantized state dtype ``op`` must serve, or None.
+
+    Only the state-consuming ops (decode/verify) see the pool dtype —
+    forward/prefill run on activations and produce full-precision
+    boundary states that are quantized at install.  bf16/fp32 state
+    dtypes are storage overrides, not quantization, and never reach the
+    registry.
+    """
+    sd = plan.state_dtype
+    return sd if (sd in _QUANT_DTYPES and op in ("decode", "verify")) else None
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
@@ -59,6 +74,13 @@ class ExecutionPlan:
     #: can demand the ``verify_capable`` mixer capability and the registry
     #: can triage the ``verify`` op at build time.
     speculate_k: int = 0
+    #: serving state-pool dtype, distinct from the activation dtype:
+    #: ``None``/"bf16"/"fp32" keep full-precision states (bf16/fp32
+    #: override the positional-cache storage dtype); "int8"/"fp8" wrap
+    #: every pool in a ``serving.quant.QuantizedPool`` and make decode/
+    #: verify resolution demand ``quant_capable`` from backends and
+    #: mixers (named rejections instead of silent dequantization).
+    state_dtype: str | None = None
 
     def with_shapes(self, shapes: ShapeInfo) -> "ExecutionPlan":
         """Copy of this plan with static call shapes attached."""
@@ -81,6 +103,8 @@ class ExecutionPlan:
             bits.append("needs_grad")
         if self.speculate_k:
             bits.append(f"speculate_k={self.speculate_k}")
+        if self.state_dtype:
+            bits.append(f"state_dtype={self.state_dtype}")
         return "ExecutionPlan(" + ", ".join(bits) + ")"
 
 
@@ -130,7 +154,8 @@ class BoundExecutor:
         # batch-led — both ops drop the plan's ShardSpec
         shard = None if op in ("decode", "verify") else p.shard
         return registry.resolve(cfg, shapes, p.platform, op=op,
-                                needs_grad=p.needs_grad, shard=shard)
+                                needs_grad=p.needs_grad, shard=shard,
+                                quant=_quant_of(p, op))
 
     # canonical ops ---------------------------------------------------------
     def forward(self, q: Array, k: Array, v: Array) -> Array:
@@ -276,7 +301,8 @@ def explain_plan(plan: ExecutionPlan, *,
             cfg = dataclasses.replace(cfg, causal=True, strict_causal=True)
         shard = None if one in ("decode", "verify") else plan.shard
         rows = registry.explain(cfg, shapes, platform, op=one,
-                                needs_grad=plan.needs_grad, shard=shard)
+                                needs_grad=plan.needs_grad, shard=shard,
+                                quant=_quant_of(plan, one))
         sections.append((one, tuple(rows)))
     return PlanExplanation(plan=plan, platform=platform,
                            sections=tuple(sections))

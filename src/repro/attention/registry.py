@@ -172,6 +172,23 @@ class Backend:
                else "") + ")"
         )
 
+    def quant_capable(self, platform: str, dtype: str, op: str = "decode"):
+        """(ok, reason) — can ``op`` serve a quantized state pool directly?
+
+        Quantized serving (``ExecutionPlan.state_dtype`` of ``int8``/
+        ``fp8``) hands the op a ``serving.quant.QuantizedPool`` — low-bit
+        payload plus per-(slot, head) fp32 scales — instead of a raw
+        ``FlowState``.  A capable backend dequantizes per head,
+        accumulates the update in fp32, and requantizes on the in-place
+        write.  The default declines, so resolution rejects with a named
+        reason rather than silently dequantizing through an unaware
+        backend.
+        """
+        return False, (
+            f"no quantized-state path for {op} (would silently dequantize "
+            f"the {dtype} pool; pick a quant-capable strategy)"
+        )
+
     def verify_support(self, op: str = "verify"):
         """(ok, reason) — whether the backend can score a drafted window.
 
@@ -278,12 +295,12 @@ def _candidates(cfg: FlowConfig) -> tuple[list, bool]:
 
 def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
            op: str, explicit: bool, needs_grad: bool,
-           shard: ShardSpec | None = None):
+           shard: ShardSpec | None = None, quant: str | None = None):
     """(applicable, reason) for one backend under the shared triage.
 
     The single triage sequence (provides -> gradient capability -> shard
-    capability -> supports) shared by ``resolve`` and ``explain`` so their
-    answers can never drift apart.
+    capability -> quantized-state capability -> supports) shared by
+    ``resolve`` and ``explain`` so their answers can never drift apart.
     """
     if op not in be.provides:
         if op == "verify":
@@ -309,6 +326,10 @@ def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
     elif be.shard_only:
         return False, ("context-parallel glue requires a sharded "
                        "ExecutionPlan (no ShardSpec in this resolution)")
+    if quant is not None:
+        ok, why = be.quant_capable(platform, quant, op=op)
+        if not ok:
+            return False, why
     ok, why = be.supports(cfg, shapes, platform, op=op, explicit=explicit)
     if ok and shard_why:
         why = f"{why}; {shard_why}"
@@ -317,7 +338,8 @@ def _judge(be: Backend, cfg: FlowConfig, shapes: ShapeInfo, platform: str,
 
 def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
             *, op: str = "forward", needs_grad: bool = False,
-            shard: ShardSpec | None = None) -> Backend:
+            shard: ShardSpec | None = None,
+            quant: str | None = None) -> Backend:
     """Deterministically pick the backend that will run ``op``.
 
     ``needs_grad=True`` additionally requires the backend to self-report
@@ -328,6 +350,10 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
     whose ``shard_support`` accepts the spec are candidates, so a sharded
     plan lands on context-parallel collective glue (``cp_*``) and every
     single-device strategy's rejection says "no collective glue".
+
+    ``quant`` (a quantized state dtype name, ``"int8"``/``"fp8"``) asks
+    for an op that serves a ``serving.quant.QuantizedPool`` in place —
+    only backends whose ``quant_capable`` accepts it are candidates.
 
     Raises ``ResolutionError`` with every candidate's rejection reason when
     nothing applies — the error is the documentation of why.
@@ -342,7 +368,7 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
     for name in names:
         be = _REGISTRY[name]
         ok, why = _judge(be, cfg, shapes, platform, op, explicit, needs_grad,
-                         shard)
+                         shard, quant)
         if ok:
             return be
         rejections.append((name, why))
@@ -350,6 +376,7 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
         f"no applicable Flow-Attention backend for op={op!r}"
         + (" with gradients" if needs_grad else "")
         + (f" sharded over {shard.describe()}" if shard is not None else "")
+        + (f" with {quant} state pools" if quant is not None else "")
         + f" on platform={platform!r} with {shapes}:\n  "
         + "\n  ".join(f"{n}: {w}" for n, w in rejections),
         rejections,
@@ -358,17 +385,18 @@ def resolve(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
 
 def explain(cfg: FlowConfig, shapes: ShapeInfo, platform: str | None = None,
             *, op: str = "forward", needs_grad: bool = False,
-            shard: ShardSpec | None = None) -> list:
+            shard: ShardSpec | None = None, quant: str | None = None) -> list:
     """Triage ``op`` for every registered backend.
 
     Returns ``[(name, applicable, reason)]`` rows — debugging aid and the
     data source for benchmark sweeps.  With ``shard`` the reasons include
-    each backend's ``shard_support`` verdict.
+    each backend's ``shard_support`` verdict; with ``quant`` each
+    backend's ``quant_capable`` verdict.
     """
     platform = platform or jax.default_backend()
     _, explicit = _candidates(cfg)
     return [
         (name, *_judge(_REGISTRY[name], cfg, shapes, platform, op, explicit,
-                       needs_grad, shard))
+                       needs_grad, shard, quant))
         for name in _ORDER
     ]

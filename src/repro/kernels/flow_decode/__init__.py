@@ -4,7 +4,9 @@ One grid launch advances the whole (slots, Hkv, D, Dv) state pool by one
 token; registered as the ``pallas_decode`` backend ahead of ``recurrent``.
 """
 from repro.kernels.flow_decode.flow_decode import flow_decode_call
-from repro.kernels.flow_decode.ops import flow_decode_step
+from repro.kernels.flow_decode.ops import flow_decode_q_step, flow_decode_step
+from repro.kernels.flow_decode.quant import flow_decode_q_call
 from repro.kernels.flow_decode.ref import flow_decode_ref
 
-__all__ = ["flow_decode_call", "flow_decode_step", "flow_decode_ref"]
+__all__ = ["flow_decode_call", "flow_decode_step", "flow_decode_q_call",
+           "flow_decode_q_step", "flow_decode_ref"]

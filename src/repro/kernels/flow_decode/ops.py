@@ -67,3 +67,74 @@ def flow_decode_step(
         s=s.reshape(b, hkv, d, dv),
     )
     return new_state, out.reshape(b, hq, 1, dv).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def flow_decode_q_step(
+    pool, q: Array, k: Array, v: Array, cfg: FlowConfig,
+    *, interpret: bool | None = None,
+):
+    """Advance one token for every slot of a *quantized* FlowState pool.
+
+    ``pool`` — a ``serving.quant.QuantizedPool`` whose payload/scale
+    trees are FlowState-typed (head granularity, ``z`` exempt).  The
+    low-bit payloads go straight into the kernel, which dequantizes in
+    VMEM, accumulates in fp32 and requantizes with a fresh per-(slot,
+    head) amax on the in-place write.  Returns (new_pool, out).
+    """
+    from repro.kernels.flow_decode.quant import flow_decode_q_call
+
+    interp = _INTERPRET if interpret is None else interpret
+    assert pool.granularity == "head" and pool.exempt == ("z",), (
+        "flow_decode_q_step expects the serving FlowState pool recipe "
+        f"(head granularity, z exempt); got {pool.granularity!r}/"
+        f"{pool.exempt!r}")
+    st, sc = pool.payload, pool.scale
+    b, hq, one, d = q.shape
+    assert one == 1, "decode_step consumes exactly one position"
+    hkv = k.shape[1]
+    g = hq // hkv
+    dv = v.shape[-1]
+    bh = b * hkv
+
+    t = st.t + 1  # (B,) int32, per-slot position counts
+    tf = jnp.broadcast_to(
+        t.astype(jnp.float32)[:, None], (b, hkv)
+    ).reshape(bh, 1)
+    qg = q[:, :, 0].reshape(b, hkv, g, d).reshape(bh, g, d)
+    k2 = k[:, :, 0].reshape(bh, d)
+    v2 = v[:, :, 0].reshape(bh, dv)
+
+    out, pays, s_pay, scs, s_sc, z = flow_decode_q_call(
+        tf, qg, k2, v2,
+        (st.k_sum.reshape(bh, d), st.q_sum.reshape(bh, d),
+         st.ko_sum.reshape(bh, d), st.qi_sum.reshape(bh, d)),
+        st.s.reshape(bh, d, dv),
+        (sc.k_sum.reshape(bh, 1), sc.q_sum.reshape(bh, 1),
+         sc.ko_sum.reshape(bh, 1), sc.qi_sum.reshape(bh, 1)),
+        sc.s.reshape(bh, 1),
+        st.z.reshape(bh, 1),
+        eps=cfg.eps, phi=cfg.phi, use_allocation=cfg.use_allocation,
+        qmax=pool.spec.qmax, is_int=pool.spec.name == "int8",
+        interpret=interp,
+    )
+    new_payload = FlowState(
+        t=t,
+        q_sum=pays[1].reshape(b, hkv, d),
+        k_sum=pays[0].reshape(b, hkv, d),
+        ko_sum=pays[2].reshape(b, hkv, d),
+        qi_sum=pays[3].reshape(b, hkv, d),
+        z=z.reshape(b, hkv),
+        s=s_pay.reshape(b, hkv, d, dv),
+    )
+    new_scale = FlowState(
+        t=sc.t,  # unit scales for the integer / exempt leaves carry over
+        q_sum=scs[1].reshape(b, hkv, 1),
+        k_sum=scs[0].reshape(b, hkv, 1),
+        ko_sum=scs[2].reshape(b, hkv, 1),
+        qi_sum=scs[3].reshape(b, hkv, 1),
+        z=sc.z,
+        s=s_sc.reshape(b, hkv, 1, 1),
+    )
+    return (pool.with_state(new_payload, new_scale),
+            out.reshape(b, hq, 1, dv).astype(q.dtype))

@@ -1,4 +1,4 @@
 from repro.kernels.gather.boundary import boundary_gather
-from repro.kernels.gather.paged import paged_gather
+from repro.kernels.gather.paged import paged_gather, paged_gather_quant
 
-__all__ = ["boundary_gather", "paged_gather"]
+__all__ = ["boundary_gather", "paged_gather", "paged_gather_quant"]

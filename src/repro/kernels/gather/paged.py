@@ -75,3 +75,68 @@ def paged_gather(kc: Array, vc: Array, table: Array, *,
         ],
         interpret=interp,
     )(table.astype(jnp.int32), kc, vc)
+
+
+def _kernel_quant(tbl_ref, k_ref, v_ref, ks_ref, vs_ref, ko_ref, vo_ref):
+    del tbl_ref  # only consumed by the index maps
+    # dequantize inline: the HBM read is the low-bit payload plus one
+    # scale column per token row; fp32 multiply happens in VMEM
+    ko_ref[...] = (k_ref[...].astype(jnp.float32)
+                   * ks_ref[...]).astype(ko_ref.dtype)
+    vo_ref[...] = (v_ref[...].astype(jnp.float32)
+                   * vs_ref[...]).astype(vo_ref.dtype)
+
+
+def paged_gather_quant(kc: Array, vc: Array, ks: Array, vs: Array,
+                       table: Array, *, out_dtype,
+                       interpret: bool | None = None) -> tuple[Array, Array]:
+    """Gather + dequantize quantized pool pages into per-slot sequences.
+
+    kc/vc: (P, Hkv, page, D|Dv) low-bit payload pools; ks/vs:
+    (P, Hkv, page, 1) fp32 per-token scales (token granularity: appended
+    rows are quantized once and never re-rounded).  Returns (kg, vg)
+    shaped (B, Hkv, MP*page, D|Dv) in ``out_dtype`` — the dense cache the
+    attention math wants, materialized from ~1/4 the HBM bytes.
+    """
+    p, hkv, page, d = kc.shape
+    dv = vc.shape[-1]
+    b, mp = table.shape
+
+    if interpret is None and _INTERPRET:
+        def flat(pool, spool, dd):
+            idx = jnp.clip(table, 0, p - 1)
+            g = pool[idx].astype(jnp.float32) * spool[idx]
+            return (g.transpose(0, 2, 1, 3, 4)
+                    .reshape(b, hkv, mp * page, dd).astype(out_dtype))
+        return flat(kc, ks, d), flat(vc, vs, dv)
+    interp = bool(interpret)
+
+    def src(b_, j, tbl):
+        return (jnp.clip(tbl[b_, j], 0, p - 1), 0, 0, 0)
+
+    def dst(b_, j, tbl):
+        return (b_, 0, j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, hkv, page, d), src),
+            pl.BlockSpec((1, hkv, page, dv), src),
+            pl.BlockSpec((1, hkv, page, 1), src),
+            pl.BlockSpec((1, hkv, page, 1), src),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hkv, page, d), dst),
+            pl.BlockSpec((1, hkv, page, dv), dst),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_quant,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, mp * page, d), out_dtype),
+            jax.ShapeDtypeStruct((b, hkv, mp * page, dv), out_dtype),
+        ],
+        interpret=interp,
+    )(table.astype(jnp.int32), kc, vc, ks, vs)

@@ -22,6 +22,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
@@ -48,6 +49,14 @@ def main():
     ap.add_argument("--page-size", type=int, default=64)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged pool size (0 = dense-equivalent worst case)")
+    ap.add_argument("--dtype", default="bf16", choices=["bf16", "fp32"],
+                    help="serving activation dtype")
+    ap.add_argument("--state-dtype", default=None,
+                    choices=["bf16", "fp32", "int8", "fp8"],
+                    help="state-pool storage dtype, independent of the "
+                    "activation dtype; int8/fp8 store quantized pools "
+                    "(low-bit payload + fp32 per-(slot, head) scales) and "
+                    "route decode through the quant-capable kernels")
     ap.add_argument("--draft", default=None, choices=["self", "tiny"],
                     help="speculative decoding draft source: 'self' "
                     "(self-speculation over the target's own caches) or "
@@ -69,11 +78,16 @@ def main():
     # option, packed admission and the speculative window ride it instead
     # of per-call kwargs
     plan = plan_of(cfg, paged=paged, packed=True,
-                   speculate_k=args.speculate_k)
+                   speculate_k=args.speculate_k,
+                   state_dtype=args.state_dtype)
+    dtype = {"bf16": jnp.bfloat16, "fp32": jnp.float32}[args.dtype]
     engine = Engine(params, cfg, slots=args.slots,
                     max_len=args.prompt_len + args.max_new + 8, plan=plan,
-                    draft=args.draft, speculate_k=args.speculate_k)
+                    dtype=dtype, draft=args.draft,
+                    speculate_k=args.speculate_k)
     print(f"[serve] attention plan: {engine.worker.plan.describe()}")
+    print(f"[serve] dtypes: activations={args.dtype} "
+          f"state_pools={args.state_dtype or args.dtype}")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

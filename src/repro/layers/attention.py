@@ -38,6 +38,7 @@ from repro.core.flow_attention import FlowConfig, phi_map
 from repro.layers import mixer as mixer_lib
 from repro.layers.linear import dense, dense_init
 from repro.layers.rope import apply_mrope, apply_rope
+from repro.serving import quant as quant_lib
 from repro.serving.paged import PagedKVCache, PagedSpec, pages_for
 from repro.utils import KeySeq
 
@@ -79,17 +80,21 @@ def flow_cfg_of(cfg: ModelConfig, causal: bool) -> FlowConfig:
 def plan_of(cfg: ModelConfig, *, causal: bool = True,
             shard: ShardSpec | None = None, paged=None, packed: bool = False,
             needs_grad: bool = False, platform: str | None = None,
-            speculate_k: int = 0) -> ExecutionPlan:
+            speculate_k: int = 0,
+            state_dtype: str | None = None) -> ExecutionPlan:
     """Build the model-level ``ExecutionPlan`` ONCE (engine/step
     construction time) instead of re-threading backend pins / ``paged=`` /
     mesh axes as per-call kwargs.  ``flow`` is derived from
     ``cfg.attention``; layers re-derive it per block anyway (hybrid stacks
     flip ``causal``/kind per slot), so the plan's job is carrying the
     execution context: shard placement, packed admission, paged caches,
-    gradient needs, and the speculative verify window (``speculate_k``)."""
+    gradient needs, the speculative verify window (``speculate_k``), and
+    the serving state-pool dtype (``state_dtype``: None/"bf16"/"fp32"
+    keep full precision, "int8"/"fp8" quantize every pool)."""
     return ExecutionPlan(flow=flow_cfg_of(cfg, causal), shard=shard,
                          paged=paged, packed=packed, needs_grad=needs_grad,
-                         platform=platform, speculate_k=speculate_k)
+                         platform=platform, speculate_k=speculate_k,
+                         state_dtype=state_dtype)
 
 
 @functools.lru_cache(maxsize=64)
@@ -419,14 +424,20 @@ def _attention_decode(
 
     q, k, v = _project_qkv(params, x, cfg, positions)
 
-    if isinstance(cache, PagedKVCache):
+    pool = cache if isinstance(cache, quant_lib.QuantizedPool) else None
+    store = pool.payload if pool is not None else cache
+    if isinstance(store, PagedKVCache):
         return _paged_decode(params, q, k, v, cache, cfg, page_table)
 
     if kind == "flow":
+        # quantized pools pass straight through: the registry decode op is
+        # quant-aware (pallas_decode dequantizes/requantizes in-kernel,
+        # recurrent around the fp32 update)
         ex = _flow_executor(cfg, True, plan)
         new_state, out = ex.decode_step(cache, q, k, v)
         return dense(params["wo"], _merge_heads(out)), new_state
     if kind == "linear":
+        st = quant_lib.dequantize_state(pool) if pool is not None else cache
         pq = phi_map(q.astype(jnp.float32), "elu1")[:, :, 0]
         pk = phi_map(k.astype(jnp.float32), "elu1")[:, :, 0]
         if cfg.n_heads != cfg.kv_heads:
@@ -435,38 +446,67 @@ def _attention_decode(
             vv = jnp.repeat(v, rep, axis=1)
         else:
             vv = v
-        s = cache.s + jnp.einsum("bhd,bhe->bhde", pk, vv[:, :, 0].astype(jnp.float32))
-        z = cache.z + pk
+        s = st.s + jnp.einsum("bhd,bhe->bhde", pk, vv[:, :, 0].astype(jnp.float32))
+        z = st.z + pk
         num = jnp.einsum("bhd,bhde->bhe", pq, s)
         den = jnp.einsum("bhd,bhd->bh", pq, z) + 1e-6
         out = (num / den[..., None])[:, :, None].astype(x.dtype)
-        return dense(params["wo"], _merge_heads(out)), LinearState(s, z, cache.pos + 1)
+        new_state = LinearState(s, z, st.pos + 1)
+        if pool is not None:
+            # constant-size state, fully rewritten: requantize whole with a
+            # fresh per-(slot, head) amax
+            new_state = quant_lib.quantize_like(pool, new_state)
+        return dense(params["wo"], _merge_heads(out)), new_state
 
     # softmax / local: write to (ring) cache then attend.  pos is per
     # slot, so writes scatter at each row's own index (continuous batching).
-    t = cache.pos  # (B,)
+    t = store.pos  # (B,)
     b = x.shape[0]
-    cache_len = cache.k.shape[2]
+    cache_len = store.k.shape[2]
     idx = t % cache_len if kind == "local" else jnp.minimum(t, cache_len - 1)
     rows = jnp.arange(b)
-    kc = cache.k.at[rows, :, idx].set(k[:, :, 0].astype(cache.k.dtype))
-    vc = cache.v.at[rows, :, idx].set(v[:, :, 0].astype(cache.v.dtype))
+    if pool is not None:
+        # append-only per-token quantization: this token's K/V rows get
+        # their own scale and land in payload + scale pools by the same
+        # scatter; prior positions are never re-rounded
+        kq, ks = quant_lib.quantize_leaf(k[:, :, 0], pool.spec, "token")
+        vq, vs = quant_lib.quantize_leaf(v[:, :, 0], pool.spec, "token")
+        kc = store.k.at[rows, :, idx].set(kq)
+        vc = store.v.at[rows, :, idx].set(vq)
+        ksc = pool.scale.k.at[rows, :, idx].set(ks)
+        vsc = pool.scale.v.at[rows, :, idx].set(vs)
+        ka = (kc.astype(jnp.float32) * ksc).astype(q.dtype)
+        va = (vc.astype(jnp.float32) * vsc).astype(q.dtype)
+        new_cache = pool.with_state(KVCache(kc, vc, t + 1),
+                                    KVCache(ksc, vsc, pool.scale.pos))
+    else:
+        kc = store.k.at[rows, :, idx].set(k[:, :, 0].astype(store.k.dtype))
+        vc = store.v.at[rows, :, idx].set(v[:, :, 0].astype(store.v.dtype))
+        ka, va = kc, vc
+        new_cache = KVCache(kc, vc, t + 1)
     kv_len = jnp.minimum(t + 1, cache_len)  # (B,)
     out = _softmax_attn(
-        q, kc, vc, causal=False, softcap=cfg.attention.softcap,
+        q, ka, va, causal=False, softcap=cfg.attention.softcap,
         kv_len=kv_len[:, None],
     )
-    return dense(params["wo"], _merge_heads(out)), KVCache(kc, vc, t + 1)
+    return dense(params["wo"], _merge_heads(out)), new_cache
 
 
-def _paged_decode(params, q, k, v, cache: PagedKVCache, cfg: ModelConfig,
+def _paged_decode(params, q, k, v, cache, cfg: ModelConfig,
                   page_table: Array | None):
     """Softmax decode on the paged pool: scatter this token's K/V into the
-    slot's current page, attend over the gathered page sequence."""
+    slot's current page, attend over the gathered page sequence.
+
+    ``cache`` may be a ``QuantizedPool`` over a ``PagedKVCache``: the
+    token's rows quantize once on append (per-token scales scatter into a
+    mirrored scale pool) and the page-table gather dequantizes inline
+    (``paged_gather_quant``)."""
     assert page_table is not None, "paged decode requires the page table"
+    pool = cache if isinstance(cache, quant_lib.QuantizedPool) else None
+    store = pool.payload if pool is not None else cache
     b = q.shape[0]
-    t = cache.pos  # (B,)
-    page = cache.k.shape[2]
+    t = store.pos  # (B,)
+    page = store.k.shape[2]
     max_pages = page_table.shape[1]
     rows = jnp.arange(b)
     # clamp the POSITION (not just the page index) so writes past the slot
@@ -476,28 +516,50 @@ def _paged_decode(params, q, k, v, cache: PagedKVCache, cfg: ModelConfig,
     pid = page_table[rows, tc // page]  # (B,)
     off = tc % page
     # sentinel pids are out of range: the scatter drops them (dead slots)
-    kc = cache.k.at[pid, :, off].set(k[:, :, 0].astype(cache.k.dtype))
-    vc = cache.v.at[pid, :, off].set(v[:, :, 0].astype(cache.v.dtype))
-    # logical per-slot cache = its pages in table order; sentinel gathers
-    # clamp into garbage that kv_len masks off.  On TPU the page-table
-    # gather is a Pallas kernel writing the (B, Hkv, MP*page, D) layout
-    # directly; off-TPU it stays a plain XLA gather.
-    from repro.kernels.gather import paged_gather
+    if pool is not None:
+        kq, ks = quant_lib.quantize_leaf(k[:, :, 0], pool.spec, "token")
+        vq, vs = quant_lib.quantize_leaf(v[:, :, 0], pool.spec, "token")
+        kc = store.k.at[pid, :, off].set(kq)
+        vc = store.v.at[pid, :, off].set(vq)
+        ksc = pool.scale.k.at[pid, :, off].set(ks)
+        vsc = pool.scale.v.at[pid, :, off].set(vs)
+        from repro.kernels.gather import paged_gather_quant
 
-    kg, vg = paged_gather(kc, vc, page_table)
+        kg, vg = paged_gather_quant(kc, vc, ksc, vsc, page_table,
+                                    out_dtype=q.dtype)
+        new_cache = pool.with_state(PagedKVCache(kc, vc, t + 1),
+                                    PagedKVCache(ksc, vsc, pool.scale.pos))
+    else:
+        kc = store.k.at[pid, :, off].set(k[:, :, 0].astype(store.k.dtype))
+        vc = store.v.at[pid, :, off].set(v[:, :, 0].astype(store.v.dtype))
+        # logical per-slot cache = its pages in table order; sentinel
+        # gathers clamp into garbage that kv_len masks off.  On TPU the
+        # page-table gather is a Pallas kernel writing the
+        # (B, Hkv, MP*page, D) layout directly; off-TPU it stays a plain
+        # XLA gather.
+        from repro.kernels.gather import paged_gather
+
+        kg, vg = paged_gather(kc, vc, page_table)
+        new_cache = PagedKVCache(kc, vc, t + 1)
     kv_len = jnp.minimum(t + 1, max_pages * page)  # (B,)
     out = _softmax_attn(
         q, kg, vg, causal=False, softcap=cfg.attention.softcap,
         kv_len=kv_len[:, None],
     )
-    return dense(params["wo"], _merge_heads(out)), PagedKVCache(kc, vc, t + 1)
+    return dense(params["wo"], _merge_heads(out)), new_cache
 
 
-def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions):
-    """MLA decode on the compressed cache (absorbed matmuls, DeepSeek-V2)."""
+def _mla_decode_absorbed(params, x, cache, cfg: ModelConfig, positions):
+    """MLA decode on the compressed cache (absorbed matmuls, DeepSeek-V2).
+
+    ``cache`` may be a ``QuantizedPool`` over an ``MLACache``: the token's
+    latent row quantizes once on append (per-token scale) and the whole
+    cache dequantizes for the absorbed matmuls."""
     m = cfg.mla
     nq = cfg.n_heads
     b = x.shape[0]
+    pool = cache if isinstance(cache, quant_lib.QuantizedPool) else None
+    store = pool.payload if pool is not None else cache
     if m.q_lora_rank:
         q = dense(params["q_up"], dense(params["q_down"], x))
     else:
@@ -511,13 +573,27 @@ def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions
         q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
         krope_t = apply_rope(krope_t[:, None], positions, theta=cfg.rope_theta)[:, 0]
 
-    t = cache.pos  # (B,)
+    t = store.pos  # (B,)
     rows = jnp.arange(b)
-    idx = jnp.minimum(t, cache.c_kv.shape[1] - 1)
-    c_kv = cache.c_kv.at[rows, idx].set(c_t[:, 0].astype(cache.c_kv.dtype))
-    k_rope = cache.k_rope.at[rows, idx].set(
-        krope_t[:, 0].astype(cache.k_rope.dtype)
-    )
+    idx = jnp.minimum(t, store.c_kv.shape[1] - 1)
+    if pool is not None:
+        cq, cs = quant_lib.quantize_leaf(c_t[:, 0], pool.spec, "token")
+        rq, rs = quant_lib.quantize_leaf(krope_t[:, 0], pool.spec, "token")
+        c_store = store.c_kv.at[rows, idx].set(cq)
+        r_store = store.k_rope.at[rows, idx].set(rq)
+        c_sc = pool.scale.c_kv.at[rows, idx].set(cs)
+        r_sc = pool.scale.k_rope.at[rows, idx].set(rs)
+        c_kv = (c_store.astype(jnp.float32) * c_sc).astype(x.dtype)
+        k_rope = (r_store.astype(jnp.float32) * r_sc).astype(x.dtype)
+        new_cache = pool.with_state(
+            MLACache(c_store, r_store, t + 1),
+            MLACache(c_sc, r_sc, pool.scale.pos))
+    else:
+        c_kv = store.c_kv.at[rows, idx].set(c_t[:, 0].astype(store.c_kv.dtype))
+        k_rope = store.k_rope.at[rows, idx].set(
+            krope_t[:, 0].astype(store.k_rope.dtype)
+        )
+        new_cache = MLACache(c_kv, k_rope, t + 1)
 
     # absorb kv_up into the query:  W_up maps kv_lora -> H*(nope+v)
     w_up = params["kv_up"]["w"].reshape(m.kv_lora_rank, nq, m.nope_head_dim + m.v_head_dim)
@@ -538,7 +614,7 @@ def _mla_decode_absorbed(params, x, cache: MLACache, cfg: ModelConfig, positions
     w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
     ctx = jnp.einsum("bhnm,bml->bhnl", w, c_kv)  # (B,H,1,lora)
     out = jnp.einsum("bhnl,lhe->bhne", ctx, w_uv.astype(ctx.dtype))
-    return dense(params["wo"], _merge_heads(out)), MLACache(c_kv, k_rope, t + 1)
+    return dense(params["wo"], _merge_heads(out)), new_cache
 
 
 def _attention_prefill(
@@ -673,6 +749,24 @@ class AttentionMixer(mixer_lib.Mixer):
         return True, ("positional cache: rollback is per-slot position "
                       "arithmetic (stale writes are masked/overwritten)")
 
+    def quant_capable(self, cfg, platform, dtype):
+        sub = self._cfg(cfg)
+        if sub.attention.kind == "local":
+            return False, ("bounded window ring stays full-precision "
+                           "(window-sized cache: negligible bytes to win, "
+                           "and ring realignment would re-round history)")
+        ok, why = quant_lib.platform_support(dtype, platform)
+        if not ok:
+            return False, why
+        kind = sub.attention.kind
+        if kind == "flow":
+            return True, f"quantized FlowState pool ({why})"
+        if kind == "linear":
+            return True, f"dequantize/requantize around the O(d^2) update ({why})"
+        if sub.mla is not None:
+            return True, f"per-token quantized latent rows ({why})"
+        return True, f"per-token quantized KV rows ({why})"
+
     def init_params(self, key, cfg):
         return attn_init(key, self._cfg(cfg))
 
@@ -682,8 +776,15 @@ class AttentionMixer(mixer_lib.Mixer):
 
     def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
         paged = plan.paged if plan is not None else None
-        return _attn_cache_init(self._cfg(cfg), batch, max_len,
-                                dtype or jnp.bfloat16, paged=paged)
+        # the plan's state_dtype outranks the activation dtype for pool
+        # storage: bf16/fp32 override the cache dtype directly, int8/fp8
+        # additionally wrap the fresh state in a QuantizedPool
+        sd = quant_lib.state_dtype_of(plan)
+        cache_dtype = {"bf16": jnp.bfloat16, "fp32": jnp.float32}.get(
+            sd, dtype or jnp.bfloat16)
+        st = _attn_cache_init(self._cfg(cfg), batch, max_len, cache_dtype,
+                              paged=paged)
+        return quant_lib.maybe_quantize(st, plan)
 
     def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
         return _attention_prefill(params, x, self._cfg(cfg), max_len,
@@ -719,6 +820,12 @@ class AttentionMixer(mixer_lib.Mixer):
             q, k, v = _project_qkv(params, x, sub, positions)
             ex = _flow_executor(sub, True, plan)
             out, traj = ex.verify_step(state, q, k, v)
+            if isinstance(state, quant_lib.QuantizedPool):
+                # the verify pass dequantized once at entry; carry the
+                # fp32 trajectory with the pool's recipe so rollback
+                # quantizes exactly once at the accepted boundary
+                traj = quant_lib.QuantTraj(traj, state.spec,
+                                           state.granularity, state.exempt)
             return dense(params["wo"], _merge_heads(out)), traj
         if kind == "linear":
             # constant-size state: the generic scanned-decode trajectory
@@ -742,6 +849,13 @@ class AttentionMixer(mixer_lib.Mixer):
     def select_verified(self, pending, accepted, n, cfg, *, plan=None):
         sub = self._cfg(cfg)
         kind = sub.attention.kind
+        if isinstance(pending, quant_lib.QuantTraj):
+            # flow verify kept the trajectory fp32: gather the accepted
+            # boundary first, THEN quantize — the rollback's single
+            # boundary requantization
+            boundary = mixer_lib.select_from_trajectory(pending.traj,
+                                                        accepted)
+            return pending.quantize(boundary)
         if kind in ("flow", "linear"):
             return super().select_verified(pending, accepted, n, cfg,
                                            plan=plan)
@@ -749,6 +863,13 @@ class AttentionMixer(mixer_lib.Mixer):
         # wrote n tokens at positions pos-n..pos-1; accepting a+1 of them
         # rewinds pos so future decodes overwrite the stale tail, and
         # kv_len masking keeps it invisible until then
+        if isinstance(pending, quant_lib.QuantizedPool):
+            # quantized positional pools rewind the payload's pos; scales
+            # are per-token and get overwritten with the stale tail
+            acc = accepted.astype(pending.payload.pos.dtype)
+            pay = pending.payload._replace(
+                pos=pending.payload.pos - (n - acc - 1))
+            return pending.with_state(pay, pending.scale)
         acc = accepted.astype(pending.pos.dtype)
         return pending._replace(pos=pending.pos - (n - acc - 1))
 

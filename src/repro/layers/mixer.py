@@ -171,6 +171,15 @@ class Mixer:
         history (overwriting ring buffers) decline."""
         return True, "trajectory rollback over scanned decode"
 
+    def quant_capable(self, cfg: ModelConfig, platform: str, dtype: str):
+        """(ok, reason) — can the decode state live in a quantized pool
+        (``serving.quant.QuantizedPool``: low-bit payload + per-(slot,
+        head) fp32 scales, ``ExecutionPlan.state_dtype``)?  The default
+        declines so resolution rejects with a named reason instead of a
+        kind silently dequantizing a pool it does not understand."""
+        return False, (f"no quantized-state decode path (would silently "
+                       f"dequantize the {dtype} pool)")
+
     # canonical ops ---------------------------------------------------------
     def init_params(self, key, cfg: ModelConfig) -> dict:
         raise NotImplementedError(f"{self.kind} does not provide init_params")
@@ -312,6 +321,8 @@ class BoundMixer:
         self.paged_capable = mixer.paged_capable(cfg)[0]
         self.differentiable = mixer.differentiable(cfg, platform)[0]
         self.verify_capable = mixer.verify_capable(cfg)[0]
+        self.quant_capable = mixer.quant_capable(
+            cfg, platform, _quant_dtype_of(plan) or "int8")[0]
 
     def init_params(self, key) -> dict:
         return self.mixer.init_params(key, self.cfg)
@@ -373,6 +384,13 @@ class BoundMixer:
                                           plan=self.plan)
 
 
+def _quant_dtype_of(plan) -> str | None:
+    """The plan's quantized state dtype, or None for full-precision pools
+    (bf16/fp32 state dtypes are storage overrides, not quantization)."""
+    sd = getattr(plan, "state_dtype", None) if plan is not None else None
+    return sd if sd in ("int8", "fp8") else None
+
+
 def _plan_demands(plan) -> tuple:
     """((capability, demand-description), ...) a plan places on a mixer."""
     if plan is None:
@@ -386,12 +404,18 @@ def _plan_demands(plan) -> tuple:
         demands.append(("differentiable", "gradients through forward"))
     if getattr(plan, "speculate_k", 0):
         demands.append(("verify_capable", "speculative verify windows"))
+    qd = _quant_dtype_of(plan)
+    if qd is not None:
+        demands.append(("quant_capable", f"{qd} quantized state pools"))
     return tuple(demands)
 
 
-def _capability(mixer: Mixer, cap: str, cfg: ModelConfig, platform: str):
+def _capability(mixer: Mixer, cap: str, cfg: ModelConfig, platform: str,
+                quant_dtype: str = "int8"):
     if cap == "differentiable":
         return mixer.differentiable(cfg, platform)
+    if cap == "quant_capable":
+        return mixer.quant_capable(cfg, platform, quant_dtype)
     return getattr(mixer, cap)(cfg)
 
 
@@ -410,7 +434,8 @@ def resolve_mixer(kind: str, cfg: ModelConfig, plan=None) -> BoundMixer:
                 or jax.default_backend())
     rejections = []
     for cap, demand in _plan_demands(plan):
-        ok, why = _capability(mixer, cap, cfg, platform)
+        ok, why = _capability(mixer, cap, cfg, platform,
+                              _quant_dtype_of(plan) or "int8")
         if not ok:
             rejections.append((kind, cap, why))
     if rejections:
@@ -467,13 +492,16 @@ def stack_capabilities(cfg: ModelConfig, platform: str | None = None) -> dict:
     ``paged_capable`` — at least one layer can page (is a pool worth
     allocating at all); ``differentiable`` — every layer trains;
     ``verify_capable`` — every layer can verify-and-rollback (speculative
-    decoding is all-or-nothing across a stack).  Each verdict pairs with
-    the first offending/supporting (kind, reason)."""
+    decoding is all-or-nothing across a stack); ``quant_capable`` — every
+    layer's state can live in a quantized pool (judged at int8, the
+    everywhere-supported format).  Each verdict pairs with the first
+    offending/supporting (kind, reason)."""
     platform = platform or jax.default_backend()
     kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
     verdicts = {}
     for cap, agg in (("packable", all), ("paged_capable", any),
-                     ("differentiable", all), ("verify_capable", all)):
+                     ("differentiable", all), ("verify_capable", all),
+                     ("quant_capable", all)):
         rows = [(k, *_capability(get_mixer(k), cap, cfg, platform))
                 for k in sorted(kinds)]
         ok = agg(r[1] for r in rows)
@@ -494,5 +522,6 @@ def capability_matrix(cfg: ModelConfig, platform: str | None = None) -> list:
             "paged_capable": m.paged_capable(cfg),
             "differentiable": m.differentiable(cfg, platform),
             "verify_capable": m.verify_capable(cfg),
+            "quant_capable": m.quant_capable(cfg, platform, "int8"),
         }))
     return rows

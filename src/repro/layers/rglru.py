@@ -189,6 +189,15 @@ class RGLRUMixer(mixer_lib.Mixer):
         return True, ("boundary states via identity-frozen scan gates "
                       "+ per-row conv-history gather")
 
+    def quant_capable(self, cfg, platform, dtype):
+        from repro.serving.quant import platform_support
+
+        ok, why = platform_support(dtype, platform)
+        if not ok:
+            return False, why
+        return True, ("dequantize -> fp32 diagonal recurrence -> "
+                      f"requantize per step ({why})")
+
     def init_params(self, key, cfg):
         return rglru_init(key, cfg)
 
@@ -196,7 +205,9 @@ class RGLRUMixer(mixer_lib.Mixer):
         return rglru_block(params, x, cfg)
 
     def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
-        return _rglru_state_init(cfg, batch)
+        from repro.serving.quant import maybe_quantize
+
+        return maybe_quantize(_rglru_state_init(cfg, batch), plan)
 
     def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
         return _rglru_prefill(params, x, cfg)
@@ -207,6 +218,14 @@ class RGLRUMixer(mixer_lib.Mixer):
 
     def decode_step(self, params, x, state, cfg, *, positions=None,
                     page_table=None, plan=None):
+        from repro.serving.quant import (QuantizedPool, dequantize_state,
+                                         quantize_like)
+
+        if isinstance(state, QuantizedPool):
+            # constant-size state, fully rewritten per step: fp32 update
+            # between a boundary dequantize and a fresh-amax requantize
+            out, new = _rglru_decode(params, x, dequantize_state(state), cfg)
+            return out, quantize_like(state, new)
         return _rglru_decode(params, x, state, cfg)
 
 

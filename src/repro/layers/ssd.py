@@ -278,6 +278,15 @@ class SSDMixer(mixer_lib.Mixer):
         return True, ("boundary states via dt-masked chunked scan "
                       "+ per-row conv-history gathers")
 
+    def quant_capable(self, cfg, platform, dtype):
+        from repro.serving.quant import platform_support
+
+        ok, why = platform_support(dtype, platform)
+        if not ok:
+            return False, why
+        return True, ("dequantize -> fp32 SSD recurrence -> requantize "
+                      f"per step ({why})")
+
     def differentiable(self, cfg, platform):
         if platform == "tpu":
             return True, (
@@ -293,7 +302,9 @@ class SSDMixer(mixer_lib.Mixer):
         return ssd_block(params, x, cfg)
 
     def state_init(self, cfg, batch, max_len, *, dtype=None, plan=None):
-        return _ssd_state_init(cfg, batch)
+        from repro.serving.quant import maybe_quantize
+
+        return maybe_quantize(_ssd_state_init(cfg, batch), plan)
 
     def prefill(self, params, x, cfg, max_len, *, positions=None, plan=None):
         return _ssd_prefill(params, x, cfg)
@@ -304,6 +315,14 @@ class SSDMixer(mixer_lib.Mixer):
 
     def decode_step(self, params, x, state, cfg, *, positions=None,
                     page_table=None, plan=None):
+        from repro.serving.quant import (QuantizedPool, dequantize_state,
+                                         quantize_like)
+
+        if isinstance(state, QuantizedPool):
+            # constant-size state, fully rewritten per step: fp32 update
+            # between a boundary dequantize and a fresh-amax requantize
+            out, new = _ssd_decode(params, x, dequantize_state(state), cfg)
+            return out, quantize_like(state, new)
         return _ssd_decode(params, x, state, cfg)
 
 

@@ -64,14 +64,18 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 4096, seed: int = 0,
                  paged: PagedSpec | bool | None = None, plan=None,
-                 dtype=None, draft: DraftSource | str | None = None,
+                 dtype=None, state_dtype: str | None = None,
+                 draft: DraftSource | str | None = None,
                  speculate_k: int = 0):
         """Build the scheduler/worker pair (and optionally a draft source).
 
         ``plan`` (an ``attention.ExecutionPlan``) carries the serving
         execution context built once by the caller; ``paged=`` remains as
         facade sugar and is folded into the worker's plan.  ``dtype``
-        overrides the serving activation dtype (default bfloat16).
+        overrides the serving activation dtype (default bfloat16);
+        ``state_dtype`` the state-pool storage dtype (``"bf16"``,
+        ``"fp32"``, ``"int8"`` or ``"fp8"`` — the quantized choices wrap
+        every pool in low-bit payload + fp32 per-(slot, head) scales).
 
         ``draft`` + ``speculate_k`` switch the hot loop to speculative
         decoding: each iteration the draft source proposes ``speculate_k``
@@ -104,6 +108,8 @@ class Engine:
                                        speculate_k=speculate_k)
         self.scheduler = Scheduler(slots)
         kw = {} if dtype is None else {"dtype": dtype}
+        if state_dtype is not None:
+            kw["state_dtype"] = state_dtype
         self.worker = Worker(params, cfg, slots=slots, max_len=max_len,
                              paged=paged or None, seed=seed, plan=plan, **kw)
         if draft == "self":

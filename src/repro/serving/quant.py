@@ -1,0 +1,318 @@
+"""Quantized serving state pools: low-bit payload + fp32 scales.
+
+Slots per device is the capacity currency at serving scale, and the
+Worker's device-resident pools (FlowState, dense/paged KV, MLA latent,
+rglru/ssd hybrid states) are what cap it.  This module makes every pool
+dtype-flexible down to int8 (and fp8 ``e4m3`` where the platform
+supports it) behind one plan-level knob, ``ExecutionPlan.state_dtype``,
+distinct from the activation dtype:
+
+  * ``QuantSpec``      — a named low-bit format (payload dtype + qmax).
+  * ``QuantizedPool``  — a registered pytree wrapping the low-bit
+    ``payload`` (same container type as the original state, so the
+    Worker's install scatters recurse over it unchanged) plus a
+    ``scale`` tree of per-(slot, head) fp32 scales with the same
+    container type.  Scales track the amax of whatever was last written:
+    constant-size states (FlowState, LinearState, RGLRU/SSD) are fully
+    rewritten every step and requantize with a fresh amax; positional
+    caches (dense/paged KV, MLA) quantize each token's row once on
+    append with a per-token scale, so already-written positions are
+    never re-rounded.
+  * ``quantize_state`` / ``dequantize_state`` / ``quantize_like`` — the
+    boundary conversions (packed-prefill install, speculative rollback,
+    verify carry-in).
+  * ``QuantTraj``      — a full-precision verify trajectory carried
+    alongside the pool's quantization recipe, so speculative
+    ``select_verified`` gathers the accepted boundary first and
+    quantizes exactly ONCE.
+  * ``pool_bytes``     — HBM accounting for the density benchmarks
+    (slots x tokens/s per HBM byte).
+
+Capability gating lives with the registries: ``Backend.quant_capable``
+and ``Mixer.quant_capable`` consult :func:`platform_support` so
+``resolve`` / ``resolve_mixer`` reject with named reasons rather than
+silently dequantizing on an unsupported platform.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec", "QuantizedPool", "QuantTraj", "QUANT_DTYPES",
+    "STATE_DTYPES", "spec_of", "platform_support", "state_dtype_of",
+    "quantize_leaf", "quantize_state", "dequantize_state", "quantize_like",
+    "maybe_quantize", "pool_bytes",
+]
+
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+#: state_dtype values that produce a ``QuantizedPool``
+QUANT_DTYPES = ("int8", "fp8")
+#: every accepted ``ExecutionPlan.state_dtype`` / ``--state-dtype`` value
+STATE_DTYPES = ("bf16", "fp32") + QUANT_DTYPES
+
+_EPS = 1e-12  # amax floor: all-zero groups get a tiny (not inf) scale
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A low-bit storage format: payload dtype plus its max magnitude."""
+
+    name: str
+
+    @property
+    def qmax(self) -> float:
+        return 127.0 if self.name == "int8" else 448.0  # e4m3 finite max
+
+    @property
+    def dtype(self):
+        if self.name == "int8":
+            return jnp.int8
+        if _FP8_DTYPE is None:  # pragma: no cover - old jax
+            raise ValueError("fp8 state pools need jnp.float8_e4m3fn")
+        return _FP8_DTYPE
+
+
+def spec_of(name: str) -> QuantSpec:
+    if name not in QUANT_DTYPES:
+        raise ValueError(f"unknown quantized state dtype {name!r}; "
+                         f"expected one of {QUANT_DTYPES}")
+    return QuantSpec(name)
+
+
+def platform_support(dtype: str, platform: str | None) -> tuple[bool, str]:
+    """(ok, reason) — can ``platform`` serve ``dtype`` state pools?
+
+    int8 pools work everywhere (integer convert + fp32 multiply is
+    portable).  fp8 ``e4m3`` is gated to TPU, where the convert is a
+    native cast; elsewhere the named rejection tells the caller to pick
+    int8 instead of silently emulating.
+    """
+    if dtype == "int8":
+        return True, "int8 payload + fp32 scales"
+    if dtype == "fp8":
+        if _FP8_DTYPE is None:
+            return False, ("fp8 state pools need jnp.float8_e4m3fn "
+                           "(jax too old)")
+        if platform != "tpu":
+            return False, (f"fp8 e4m3 state pools are TPU-only (platform="
+                           f"{platform}); use int8 here")
+        return True, "fp8 e4m3 payload + fp32 scales"
+    return False, (f"unknown quantized state dtype {dtype!r}; expected one "
+                   f"of {QUANT_DTYPES}")
+
+
+def state_dtype_of(plan) -> str | None:
+    """The plan's state-pool dtype, or None (plan-less callers included)."""
+    return getattr(plan, "state_dtype", None) if plan is not None else None
+
+
+# ---------------------------------------------------------------------------
+# Leaf-level quantization
+# ---------------------------------------------------------------------------
+def _scale_axes(x, granularity: str) -> tuple[int, ...]:
+    """Axes the amax reduces over (the kept prefix indexes the scale).
+
+    ``head``:  keep (slot, head) — axes [0, 1] of an ndim>=3 leaf, just
+               the slot axis of a 2-D leaf.  Used for constant-size
+               states that are rewritten whole every step.
+    ``token``: keep everything but the feature axis — one scale per
+               written row, so appends never re-round old positions.
+    """
+    kept = x.ndim - 1 if granularity == "token" else (2 if x.ndim >= 3 else 1)
+    return tuple(range(kept, x.ndim))
+
+
+def _quantizable(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2
+
+
+def _unit_scale(x):
+    """Placeholder scale for exempt/integer leaves.
+
+    Keeps axis 0 (the slot axis) so the Worker's batch-led install
+    scatters (``scale.at[slot_ids].set(...)``) stay shape-correct.
+    """
+    return jnp.ones(x.shape[:1] + (1,) * (x.ndim - 1), jnp.float32)
+
+
+def quantize_leaf(x, spec: QuantSpec, granularity: str = "head"):
+    """Quantize one array; returns ``(payload, fp32 scale)``.
+
+    ``scale = amax / qmax`` per kept-axis group; int8 payloads round to
+    nearest, fp8 payloads are a clipped cast (the cast itself rounds).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=_scale_axes(x, granularity),
+                   keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / spec.qmax
+    y = jnp.clip(xf / scale, -spec.qmax, spec.qmax)
+    if spec.name == "int8":
+        y = jnp.rint(y)
+    return y.astype(spec.dtype), scale
+
+
+# ---------------------------------------------------------------------------
+# The pool
+# ---------------------------------------------------------------------------
+class QuantizedPool:
+    """A state pool stored low-bit: ``payload`` + per-group fp32 ``scale``.
+
+    Both trees share the original state's container type (FlowState,
+    KVCache, ...), so code that scatters/gathers the state leafwise —
+    the Worker's ``_install_layer``, trajectory stacking in
+    ``Mixer.verify_step`` — applies to payload and scale symmetrically.
+    ``spec``/``granularity``/``exempt`` ride as hashable pytree aux
+    data, so jit treats pools with the same recipe as one treedef.
+    """
+
+    __slots__ = ("payload", "scale", "spec", "granularity", "exempt")
+
+    def __init__(self, payload, scale, spec: QuantSpec, granularity: str,
+                 exempt: tuple[str, ...] = ()):
+        self.payload = payload
+        self.scale = scale
+        self.spec = spec
+        self.granularity = granularity
+        self.exempt = tuple(exempt)
+
+    def with_state(self, payload, scale) -> "QuantizedPool":
+        """Same recipe, new payload/scale trees."""
+        return QuantizedPool(payload, scale, self.spec, self.granularity,
+                             self.exempt)
+
+    def __repr__(self):  # pragma: no cover - debugging sugar
+        return (f"QuantizedPool({type(self.payload).__name__}, "
+                f"{self.spec.name}, per-{self.granularity})")
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedPool,
+    lambda p: ((p.payload, p.scale), (p.spec, p.granularity, p.exempt)),
+    lambda aux, ch: QuantizedPool(ch[0], ch[1], *aux),
+)
+
+
+def _quantize_tree(tree, spec, granularity, skip: bool):
+    """Quantize every eligible leaf of ``tree``; unflatten both results."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    pairs = [quantize_leaf(x, spec, granularity)
+             if (not skip and _quantizable(x)) else (x, _unit_scale(x))
+             for x in flat]
+    return (treedef.unflatten([p for p, _ in pairs]),
+            treedef.unflatten([s for _, s in pairs]))
+
+
+def quantize_state(state, spec: QuantSpec, *, granularity: str = "head",
+                   exempt: tuple[str, ...] = ()) -> QuantizedPool:
+    """Wrap a full-precision state in a :class:`QuantizedPool`.
+
+    ``exempt`` names top-level NamedTuple fields stored raw (e.g. the
+    FlowState normalizer ``z``, which the fused kernel keeps fp32);
+    integer leaves (step counters, positions) always pass through.
+    Names absent from ``state``'s fields are ignored, so a pool recipe
+    applies to differently-shaped boundary states too.
+    """
+    fields = getattr(type(state), "_fields", None)
+    if fields is not None:
+        ex = frozenset(exempt)
+        parts = [_quantize_tree(child, spec, granularity, name in ex)
+                 for name, child in zip(fields, state)]
+        payload = type(state)(*[p for p, _ in parts])
+        scale = type(state)(*[s for _, s in parts])
+    else:
+        payload, scale = _quantize_tree(state, spec, granularity, False)
+    return QuantizedPool(payload, scale, spec, granularity, tuple(exempt))
+
+
+def dequantize_state(pool: QuantizedPool):
+    """Back to full precision: quantized leaves become fp32, rest pass."""
+    qdtype = pool.spec.dtype
+
+    def one(p, s):
+        return p.astype(jnp.float32) * s if p.dtype == qdtype else p
+
+    return jax.tree_util.tree_map(one, pool.payload, pool.scale)
+
+
+def quantize_like(pool: QuantizedPool, state) -> QuantizedPool:
+    """Quantize a fresh full-precision state with ``pool``'s recipe.
+
+    The boundary conversion: packed-prefill install scatters and
+    speculative rollbacks produce full-precision states that must enter
+    the pool with fresh amax-tracked scales.
+    """
+    return quantize_state(state, pool.spec, granularity=pool.granularity,
+                          exempt=pool.exempt)
+
+
+#: positional caches append per-token rows; everything else is a
+#: constant-size state rewritten whole each step
+_POSITIONAL = ("KVCache", "PagedKVCache", "MLACache")
+
+
+def maybe_quantize(state: Any, plan) -> Any:
+    """Pool-ify ``state`` iff the plan asks for a quantized state dtype.
+
+    Chooses the recipe by state shape: positional caches get per-token
+    scales (append-only, old rows never re-rounded), constant-size
+    states get per-(slot, head) scales (fresh amax every rewrite).  The
+    FlowState normalizer ``z`` stays raw fp32 — it is a running sum of
+    exp() competition weights whose magnitude the decode kernels divide
+    by, and exempting it lets every kernel assume a full-precision
+    denominator.
+    """
+    sd = state_dtype_of(plan)
+    if sd not in QUANT_DTYPES:
+        return state
+    name = type(state).__name__
+    return quantize_state(
+        state, spec_of(sd),
+        granularity="token" if name in _POSITIONAL else "head",
+        exempt=("z",) if name == "FlowState" else ())
+
+
+def pool_bytes(tree) -> int:
+    """Total device bytes of a cache tree (pools count payload + scales)."""
+    return sum(int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Speculative trajectories
+# ---------------------------------------------------------------------------
+class QuantTraj:
+    """A full-precision verify trajectory + the pool recipe to return to.
+
+    Flow verify runs the k-token window in full precision (the chunked
+    verify backends dequantize the carry-in once); the trajectory of
+    per-position boundary states stays fp32 so speculative rollback can
+    gather the accepted boundary first and quantize exactly once —
+    quantizing every trajectory position would round k states to throw
+    k-1 away.
+    """
+
+    __slots__ = ("traj", "spec", "granularity", "exempt")
+
+    def __init__(self, traj, spec: QuantSpec, granularity: str,
+                 exempt: tuple[str, ...] = ()):
+        self.traj = traj
+        self.spec = spec
+        self.granularity = granularity
+        self.exempt = tuple(exempt)
+
+    def quantize(self, state) -> QuantizedPool:
+        """Quantize a gathered boundary state back into pool form."""
+        return quantize_state(state, self.spec, granularity=self.granularity,
+                              exempt=self.exempt)
+
+
+jax.tree_util.register_pytree_node(
+    QuantTraj,
+    lambda t: ((t.traj,), (t.spec, t.granularity, t.exempt)),
+    lambda aux, ch: QuantTraj(ch[0], *aux),
+)

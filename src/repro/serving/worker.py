@@ -108,6 +108,21 @@ def _install_layer(dst, src, slot_ids, pids, offs):
     Out-of-range slot ids / sentinel page ids drop, so callers can pad
     the admission batch (R rows) freely.
     """
+    from repro.serving.quant import QuantizedPool, quantize_like
+
+    if isinstance(dst, QuantizedPool):
+        # quantize the fp32 prefill cache ONCE at the install boundary,
+        # then scatter payload and per-(row, head) scales with the same
+        # leafwise recursion the full-precision pools use — both trees
+        # are the original cache's container type, so every branch below
+        # applies unchanged to the scale tree (unit scales for exempt
+        # leaves scatter harmlessly)
+        src_q = src if isinstance(src, QuantizedPool) else \
+            quantize_like(dst, src)
+        return dst.with_state(
+            _install_layer(dst.payload, src_q.payload, slot_ids, pids, offs),
+            _install_layer(dst.scale, src_q.scale, slot_ids, pids, offs),
+        )
     if isinstance(dst, PagedKVCache):
         # src is the dense (R, Hkv, L, D) prefill cache; flatten into pages
         l = src.k.shape[2]
@@ -162,7 +177,8 @@ class Worker:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
                  paged: PagedSpec | None = None, seed: int = 0,
-                 plan: ExecutionPlan | None = None, dtype=jnp.bfloat16):
+                 plan: ExecutionPlan | None = None, dtype=jnp.bfloat16,
+                 state_dtype: str | None = None):
         """Build the cache pool, the serving plan and the jitted hot-path fns.
 
         ``dtype`` — serving activation dtype (default bfloat16; fp32
@@ -170,6 +186,14 @@ class Worker:
         oracle, which parity tests use: bf16's ~8 mantissa bits round
         differently across the packed batch's matmul shapes and can flip a
         near-tied greedy argmax).
+
+        ``state_dtype`` — storage dtype for the slot-batched state pools,
+        independent of the activation dtype: ``"bf16"``/``"fp32"`` store
+        full-precision caches in that width; ``"int8"``/``"fp8"`` wrap
+        every pool in a ``QuantizedPool`` (low-bit payload + fp32 scales)
+        and route decode through the quant-capable kernel variants.  The
+        resolution registries reject plans whose backends would have to
+        silently dequantize.
         """
         self.params = params
         self.cfg = cfg
@@ -183,8 +207,10 @@ class Worker:
         # THE serving plan: built once here, carried by every jitted call —
         # no per-call paged=/lengths=/backend kwarg threading below this line
         base = plan if plan is not None else plan_of(cfg)
-        self.plan = dataclasses.replace(base, paged=self.paged,
-                                        packed=self.packable)
+        self.plan = dataclasses.replace(
+            base, paged=self.paged, packed=self.packable,
+            state_dtype=state_dtype if state_dtype is not None
+            else base.state_dtype)
         self.allocator = (PageAllocator(self.paged, slots, max_len)
                           if self.paged else None)
         self.caches = lm.init_caches(cfg, slots, max_len, plan=self.plan,
