@@ -1,0 +1,253 @@
+"""Capability auditor: both registries cross-checked against their ops.
+
+The Backend and Mixer registries advertise capabilities declaratively
+(``provides``/``differentiable``/``shardable`` sets, ``packable``/
+``verify_capable``/... predicates).  Resolution trusts those claims, so
+a backend that *claims* an op it never implemented fails at call time
+with a bare ``NotImplementedError`` instead of a named rejection.  This
+module makes the claims mechanically honest:
+
+* every op in ``provides`` must have an overridden method (claiming
+  ``verify`` while inheriting the base ``verify_step`` is drift);
+* ``differentiable`` and ``shardable`` must be subsets of ``provides``;
+* ``shard_only`` backends must actually be shardable;
+* ``quant_capable`` claims require a serving op (``decode``/``verify``);
+* mixers that report ``packable``/``verify_capable`` must override
+  ``prefill_packed``/``decode_step``;
+* the prose capability tables drift-checked: the predicate table and
+  kernel-family table in ``docs/execution.md``, and the mixer matrix in
+  ``README.md`` vs a live ``capability_matrix`` run.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+from repro.analysis.lint import Finding
+
+__all__ = ["audit_backends", "audit_mixers", "audit_docs", "audit_capabilities"]
+
+_OP_METHODS = {
+    "forward": "forward",
+    "prefill": "prefill",
+    "prefill_packed": "prefill",
+    "decode": "decode_step",
+    "verify": "verify_step",
+}
+
+#: every capability surface a Backend exposes; the docs predicate table
+#: must mention each one (drift check c)
+_BACKEND_PREDICATES = (
+    "supports", "differentiable", "shardable", "shard_support",
+    "grad_support", "verify_support", "quant_capable",
+)
+
+
+def _overridden(obj, base, method: str) -> bool:
+    return getattr(type(obj), method, None) is not getattr(base, method, None)
+
+
+def audit_backends() -> list[Finding]:
+    """Cross-check every registered Backend's claims against its ops."""
+    import repro.attention as attention
+    from repro.attention.registry import Backend
+
+    out = []
+    for name in attention.list_backends():
+        be = attention.get_backend(name)
+        loc = f"backend:{name}"
+        unknown = set(be.provides) - set(_OP_METHODS)
+        if unknown:
+            out.append(Finding(
+                "CA001", loc, 0,
+                f"provides unknown ops {sorted(unknown)}; known: "
+                f"{sorted(_OP_METHODS)}"))
+        for op in sorted(set(be.provides) & set(_OP_METHODS)):
+            method = _OP_METHODS[op]
+            if not _overridden(be, Backend, method):
+                out.append(Finding(
+                    "CA001", loc, 0,
+                    f"claims op {op!r} but inherits the base "
+                    f"{method}() (NotImplementedError at call time)"))
+        if not set(be.differentiable) <= set(be.provides):
+            out.append(Finding(
+                "CA001", loc, 0,
+                f"differentiable {sorted(be.differentiable)} is not a "
+                f"subset of provides {sorted(be.provides)}"))
+        if not set(be.shardable) <= set(be.provides):
+            out.append(Finding(
+                "CA001", loc, 0,
+                f"shardable {sorted(be.shardable)} is not a subset of "
+                f"provides {sorted(be.provides)}"))
+        if be.shard_only and not be.shardable:
+            out.append(Finding(
+                "CA001", loc, 0,
+                "shard_only backend with an empty shardable set can "
+                "never be resolved"))
+        ok, _ = be.verify_support()
+        if ok and "verify" not in be.provides:
+            out.append(Finding(
+                "CA001", loc, 0,
+                "verify_support() says yes but 'verify' is not in "
+                "provides — resolution and execution disagree"))
+        for platform, dtype in (("tpu", "int8"), ("tpu", "fp8"),
+                                ("cpu", "int8")):
+            qok, _ = be.quant_capable(platform, dtype)
+            if qok and not ({"decode", "verify"} & set(be.provides)):
+                out.append(Finding(
+                    "CA001", loc, 0,
+                    f"quant_capable({platform}, {dtype}) claims a "
+                    f"quantized-pool path but provides no serving op"))
+    return out
+
+
+def _hybrid_cfg():
+    """The README matrix's config: softmax-mode recurrentgemma hybrid."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("recurrentgemma_9b")
+    return dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, kind="softmax"))
+
+
+def audit_mixers() -> list[Finding]:
+    """Cross-check every registered Mixer's claims against its ops."""
+    from repro.layers.mixer import Mixer, get_mixer, list_mixers
+
+    cfg = _hybrid_cfg()
+    out = []
+    for kind in list_mixers():
+        m = get_mixer(kind)
+        loc = f"mixer:{kind}"
+        for method in ("forward", "state_init", "prefill", "decode_step"):
+            if not _overridden(m, Mixer, method):
+                out.append(Finding(
+                    "CA002", loc, 0,
+                    f"registered mixer inherits the base {method}() — the "
+                    f"canonical lifecycle is not implemented"))
+        if m.packable(cfg)[0] and not _overridden(m, Mixer, "prefill_packed"):
+            out.append(Finding(
+                "CA002", loc, 0,
+                "claims packable but inherits the base prefill_packed() "
+                "(NotImplementedError on a packed admission)"))
+        if (m.verify_capable(cfg)[0]
+                and not _overridden(m, Mixer, "decode_step")):
+            out.append(Finding(
+                "CA002", loc, 0,
+                "claims verify_capable but the default verify_step needs "
+                "an overridden decode_step"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Docs drift
+# ---------------------------------------------------------------------------
+_CELL_YES = re.compile(r"^[\s*`]*yes\b", re.IGNORECASE)
+_CELL_NO = re.compile(r"^[\s*`]*no\b|^[\s*`]*n/a\b|forward-only",
+                      re.IGNORECASE)
+
+
+def _table_rows(text: str, header_match: str) -> list[list[str]]:
+    """Rows of the first markdown table whose header contains the match.
+
+    Each row is a list of stripped cell strings (separator rows dropped).
+    """
+    lines = text.splitlines()
+    rows = []
+    in_table = False
+    for ln in lines:
+        if not ln.strip().startswith("|"):
+            if in_table:
+                break
+            continue
+        cells = [c.strip() for c in ln.strip().strip("|").split("|")]
+        if not in_table:
+            if header_match in ln:
+                in_table = True
+            continue
+        if set("".join(cells)) <= set("-: "):
+            continue  # separator row
+        rows.append(cells)
+    return rows
+
+
+def audit_docs(root: pathlib.Path | None = None) -> list[Finding]:
+    """Drift-check the prose capability tables against the registries."""
+    root = root or pathlib.Path(__file__).resolve().parents[3]
+    out = []
+
+    # (1) docs/execution.md predicate table mentions every Backend predicate
+    exec_md = root / "docs" / "execution.md"
+    if exec_md.exists():
+        text = exec_md.read_text()
+        for pred in _BACKEND_PREDICATES:
+            if f"`{pred}" not in text and pred not in text:
+                out.append(Finding(
+                    "CA003", "docs/execution.md", 0,
+                    f"Backend capability predicate {pred!r} is undocumented "
+                    f"in the predicate table"))
+
+        # (2) kernel-family table: each row's directory exists and its
+        # backward column agrees with the presence of bwd.py
+        kroot = root / "src" / "repro" / "kernels"
+        for row in _table_rows(text, "backward"):
+            if len(row) < 3:
+                continue
+            kname = row[0].strip("`")
+            kdir = kroot / kname
+            if not kdir.is_dir():
+                out.append(Finding(
+                    "CA003", "docs/execution.md", 0,
+                    f"kernel-family table names {kname!r} but "
+                    f"src/repro/kernels/{kname}/ does not exist"))
+                continue
+            has_bwd = (kdir / "bwd.py").exists()
+            says_yes = bool(_CELL_YES.match(row[2]))
+            if says_yes != has_bwd:
+                out.append(Finding(
+                    "CA003", "docs/execution.md", 0,
+                    f"kernel-family table says backward="
+                    f"{'yes' if says_yes else 'no'} for {kname!r} but "
+                    f"bwd.py {'exists' if has_bwd else 'is absent'}"))
+    else:  # pragma: no cover - repo layout invariant
+        out.append(Finding("CA003", "docs/execution.md", 0,
+                           "docs/execution.md is missing"))
+
+    # (3) README mixer matrix vs a live capability_matrix run
+    readme = root / "README.md"
+    if readme.exists():
+        from repro.layers.mixer import capability_matrix
+
+        live = {kind: caps for kind, caps in capability_matrix(_hybrid_cfg())}
+        cols = ("packable", "paged_capable", "differentiable",
+                "verify_capable")
+        for row in _table_rows(readme.read_text(), "packable"):
+            if len(row) < 5:
+                continue
+            kind = row[0].strip("`")
+            caps = live.get(kind)
+            if caps is None:
+                out.append(Finding(
+                    "CA003", "README.md", 0,
+                    f"mixer matrix row {kind!r} is not a registered mixer"))
+                continue
+            for cell, col in zip(row[1:5], cols):
+                yes = bool(_CELL_YES.match(cell))
+                no = bool(_CELL_NO.match(cell))
+                if not yes and not no:
+                    continue  # conditional prose cell — not drift-checkable
+                ok = bool(caps[col][0])
+                if yes != ok and (yes or no):
+                    out.append(Finding(
+                        "CA003", "README.md", 0,
+                        f"mixer matrix says {kind}.{col}="
+                        f"{'yes' if yes else 'no'} but capability_matrix "
+                        f"reports {ok} ({caps[col][1]})"))
+    return out
+
+
+def audit_capabilities(root: pathlib.Path | None = None) -> list[Finding]:
+    """Run backend, mixer, and docs-drift audits together."""
+    return audit_backends() + audit_mixers() + audit_docs(root)

@@ -1,0 +1,175 @@
+"""HLO structural-drift gate: canonical plans vs a committed baseline.
+
+``repro.analysis --hlo`` lowers + compiles two canonical plans — a tiny
+train step (loss + grads) and a tiny decode step — parses the optimized
+HLO with ``launch.hlo_analysis`` (trip-count-aware dot FLOPs, HBM
+bytes, per-category collective bytes), and compares the numbers against
+``benchmarks/hlo_baseline.json``.  Any metric drifting more than 15%
+(mirroring ``benchmarks/regression_gate.py``) or a collective category
+appearing/vanishing is reported as a finding: an innocent-looking
+change that doubles dot FLOPs or grows HBM traffic in the canonical
+step fails CI with the number attached, instead of surfacing weeks
+later on hardware.  Refresh the baseline deliberately with
+``repro.analysis --hlo --update-hlo-baseline``.
+
+The canonical plans are intentionally small (2 layers, d=64): the gate
+tracks *structure* — op mix, fusion boundaries, scan trip counts — not
+wall-clock, so CPU-compiled numbers are stable and cheap.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.lint import Finding
+
+__all__ = ["DEFAULT_BASELINE", "TOLERANCE", "collect_metrics",
+           "compare_to_baseline", "write_baseline", "audit_hlo"]
+
+DEFAULT_BASELINE = (pathlib.Path(__file__).resolve().parents[3]
+                    / "benchmarks" / "hlo_baseline.json")
+
+#: relative drift allowed per metric, mirroring regression_gate.py
+TOLERANCE = 0.15
+
+_B, _N = 2, 128  # canonical batch and sequence length
+
+
+def _tiny_cfg():
+    import dataclasses
+
+    from repro.config import AttentionConfig, ModelConfig
+
+    return ModelConfig(
+        name="analysis-tiny", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=256, max_seq_len=_N,
+        act="gelu", norm="layernorm", remat=False, scan_layers=False,
+        attention=dataclasses.replace(AttentionConfig(), kind="flow",
+                                      chunk_size=64),
+    )
+
+
+def _metrics(compiled, trips) -> dict:
+    from repro.launch.hlo_analysis import (
+        collective_bytes_by_category,
+        scale_costs,
+    )
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_by_category(hlo, trips)
+    flops, hbm = scale_costs(compiled, hlo, trips)
+    return {
+        "dot_flops": float(flops),
+        "hbm_bytes": float(hbm),
+        "collective_bytes": float(coll["total_bytes"]),
+        "collectives": {k: float(v)
+                        for k, v in sorted(coll["by_op"].items())},
+    }
+
+
+def collect_metrics() -> dict:
+    """Compile the canonical train/serve plans and parse their HLO."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    cfg = _tiny_cfg()
+    sds = jax.ShapeDtypeStruct
+    trips = [1, 1, max(1, _N // cfg.attention.chunk_size)]
+
+    params = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+
+    def train_step(p, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(p, batch, cfg, dtype=jnp.float32)
+        return loss, grads
+
+    batch = {
+        "inputs": sds((_B, _N), jnp.int32),
+        "targets": sds((_B, _N), jnp.int32),
+        "mask": sds((_B, _N), jnp.float32),
+    }
+    train_compiled = jax.jit(train_step).lower(params, batch).compile()
+
+    caches = jax.eval_shape(lambda: lm.init_caches(cfg, _B, _N))
+
+    def decode_step(p, tok, c, pos):
+        return lm.decode(p, tok, c, cfg, pos, dtype=jnp.float32)
+
+    decode_compiled = jax.jit(decode_step).lower(
+        params, sds((_B, 1), jnp.int32), caches,
+        sds((_B,), jnp.int32)).compile()
+
+    return {
+        "train": _metrics(train_compiled, trips),
+        "serve": _metrics(decode_compiled, [1, 1, 1]),
+    }
+
+
+def compare_to_baseline(metrics: dict, baseline: dict) -> list[Finding]:
+    """15%-tolerance drift gate over every scalar metric, per plan."""
+    out = []
+    for plan, base in baseline.get("plans", {}).items():
+        new = metrics.get(plan)
+        if new is None:
+            out.append(Finding(
+                "HL001", f"hlo:{plan}", 0,
+                "baselined plan no longer produced by the canonical run"))
+            continue
+        for key in ("dot_flops", "hbm_bytes", "collective_bytes"):
+            b, n = float(base.get(key, 0.0)), float(new.get(key, 0.0))
+            drift = abs(n - b) / max(abs(b), 1.0)
+            if drift > TOLERANCE:
+                out.append(Finding(
+                    "HL001", f"hlo:{plan}", 0,
+                    f"{key} drifted {drift:+.0%} ({b:.3g} -> {n:.3g}); "
+                    f"refresh deliberately with --update-hlo-baseline if "
+                    f"intended"))
+        bcats = set(base.get("collectives", {}))
+        ncats = set(new.get("collectives", {}))
+        if bcats != ncats:
+            out.append(Finding(
+                "HL001", f"hlo:{plan}", 0,
+                f"collective structure changed: baseline {sorted(bcats)} "
+                f"vs now {sorted(ncats)}"))
+    for plan in metrics:
+        if plan not in baseline.get("plans", {}):
+            out.append(Finding(
+                "HL001", f"hlo:{plan}", 0,
+                "plan has no committed baseline; run --update-hlo-baseline"))
+    return out
+
+
+def write_baseline(metrics: dict,
+                   path: pathlib.Path | None = None) -> pathlib.Path:
+    """Write ``metrics`` as the committed baseline JSON."""
+    path = path or DEFAULT_BASELINE
+    path.parent.mkdir(parents=True, exist_ok=True)
+    import jax
+
+    payload = {
+        "_comment": ("canonical-plan HLO metrics; repro.analysis --hlo "
+                     "gates drift at 15% like regression_gate.py"),
+        "jax_version": jax.__version__,
+        "plans": metrics,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def audit_hlo(baseline_path: pathlib.Path | None = None,
+              update: bool = False) -> list[Finding]:
+    """Collect canonical-plan metrics and gate them against the baseline."""
+    path = baseline_path or DEFAULT_BASELINE
+    metrics = collect_metrics()
+    if update:
+        write_baseline(metrics, path)
+        return []
+    if not path.exists():
+        return [Finding(
+            "HL001", "hlo", 0,
+            f"no committed baseline at {path}; run "
+            f"repro.analysis --hlo --update-hlo-baseline")]
+    baseline = json.loads(path.read_text())
+    return compare_to_baseline(metrics, baseline)

@@ -1,0 +1,413 @@
+"""flowlint: stdlib-``ast`` rules enforcing the repo's execution invariants.
+
+Eight PRs of growth produced invariants that no general-purpose linter
+knows about: call sites must resolve strategies through the registries
+(never import a backend/kernel module directly), the serving hot loop
+must never host-sync outside the one sanctioned transfer per step,
+deprecated warn-once shims must not gain new internal callers, and
+``custom_vjp`` rules must never save sequence-length-sized residuals
+(the paper's linearization keeps state O(d^2)).  Each rule has a stable
+ID so findings can be suppressed per line or grandfathered in a
+baseline:
+
+* **FL001** registry bypass — ``layers/`` / ``models/`` / ``serving/``
+  importing ``repro.kernels.*`` or a ``repro.attention`` *submodule*
+  instead of the public facade + ``resolve``/``resolve_mixer``.
+* **FL002** hot-path host sync — ``.item()``, ``jax.device_get``,
+  ``.block_until_ready()``, ``np.asarray`` on computed (non-parameter)
+  values, and ``int()``/``float()``/``np.*`` inside jit-target
+  functions, scoped to ``serving/worker.py``, ``serving/draft.py`` and
+  the kernel wrappers.
+* **FL003** deprecated-shim usage — the warn-once legacy names
+  (``attn_cache_init``, ``make_context_parallel``, ...) must not gain
+  new callers inside ``src/repro``.
+* **FL004** custom_vjp residual shape — residual tuples of
+  ``defvjp``-registered forwards may only save function inputs or
+  kernel aux outputs, never the primal output or inline-computed
+  arrays (the kernel auditor adds the byte-budget check on top).
+
+Suppression: a trailing ``# flowlint: disable=FL001`` (comma-separated
+IDs, or ``all``) silences that line; sanctioned exceptions should carry
+a one-line reason after the IDs.  A committed baseline JSON
+(``src/repro/analysis/baseline.json``) grandfathers findings by
+``rule:path:line`` key — shipped empty, and CI keeps it that way.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+
+__all__ = [
+    "Finding", "lint_source", "lint_file", "lint_tree", "load_baseline",
+    "apply_baseline", "RULES", "DEFAULT_BASELINE",
+]
+
+DEFAULT_BASELINE = pathlib.Path(__file__).with_name("baseline.json")
+
+#: rule id -> one-line description (the catalog ``docs/analysis.md`` renders)
+RULES = {
+    "FL001": "registry bypass: import backends/kernels via the registries",
+    "FL002": "hot-path host sync outside the sanctioned per-step transfer",
+    "FL003": "deprecated warn-once shim gained an internal caller",
+    "FL004": "custom_vjp residual is not an input or kernel aux output",
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*flowlint:\s*disable=([A-Za-z0-9_,]+)")
+
+# FL001 scope: the consumer layers that must go through resolve()/
+# resolve_mixer() rather than binding an implementation module directly
+_FL001_DIRS = ("repro/layers/", "repro/models/", "repro/serving/")
+
+# FL002 scope: the serving hot loop and every kernel wrapper module
+_FL002_FILES = ("repro/serving/worker.py", "repro/serving/draft.py")
+_FL002_DIRS = ("repro/kernels/",)
+
+# FL003: warn-once legacy names (layers/mixer.make_legacy_shim products
+# plus the pre-plan context-parallel constructor)
+_SHIM_NAMES = frozenset({
+    "attn_cache_init", "attention_prefill", "attention_decode",
+    "rglru_state_init", "rglru_prefill", "rglru_decode",
+    "ssd_state_init", "ssd_prefill", "ssd_decode",
+    "make_context_parallel",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint/audit finding with a stable, baselinable identity."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"
+
+    @property
+    def key(self) -> str:
+        """Baseline identity: ``rule:path:line``."""
+        return f"{self.rule}:{self.path}:{self.line}"
+
+    def render(self) -> str:
+        """One ``path:line: RULE message`` line for terminal output."""
+        return f"{self.path}:{self.line}: {self.rule} [{self.severity}] {self.message}"
+
+
+def _suppressions(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, ln in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(ln)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        out.setdefault(i, set()).update(ids)
+        if ln.strip().startswith("#"):
+            # a comment-only disable line also covers the statement below
+            # (the idiom for statements too long to carry a trailer)
+            out.setdefault(i + 1, set()).update(ids)
+    return out
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+# ---------------------------------------------------------------------------
+# FL001 — registry bypass
+# ---------------------------------------------------------------------------
+def _rule_fl001(tree: ast.AST, relpath: str) -> list[Finding]:
+    if not any(d in relpath for d in _FL001_DIRS):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        mods: list[str] = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [node.module]
+        for mod in mods:
+            if mod == "repro.kernels" or mod.startswith("repro.kernels."):
+                out.append(Finding(
+                    "FL001", relpath, node.lineno,
+                    f"imports kernel module {mod!r} directly; kernels bind "
+                    f"through attention.resolve / resolve_mixer",
+                ))
+            elif (isinstance(node, ast.ImportFrom)
+                  and mod.startswith("repro.attention.")):
+                out.append(Finding(
+                    "FL001", relpath, node.lineno,
+                    f"imports attention submodule {mod!r}; use the public "
+                    f"repro.attention facade (re-exports) or resolve(plan)",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FL002 — hot-path host sync
+# ---------------------------------------------------------------------------
+def _jit_target_names(tree: ast.AST) -> set[str]:
+    """Names of functions handed to ``jax.jit(...)`` in this module."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        is_jit = (isinstance(fn, ast.Attribute) and fn.attr == "jit") or (
+            isinstance(fn, ast.Name) and fn.id == "jit")
+        if is_jit and node.args and isinstance(node.args[0], ast.Name):
+            names.add(node.args[0].id)
+    return names
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        node = dec
+        if isinstance(node, ast.Call):  # functools.partial(jax.jit, ...)
+            if node.args:
+                node = node.args[0]
+        if isinstance(node, ast.Attribute) and node.attr == "jit":
+            return True
+        if isinstance(node, ast.Name) and node.id == "jit":
+            return True
+    return False
+
+
+def _own_nodes(fn: ast.FunctionDef):
+    """Walk ``fn``'s body without descending into nested function defs."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue  # nested defs get their own visit with their own params
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _rule_fl002(tree: ast.AST, relpath: str) -> list[Finding]:
+    if not relpath.endswith(_FL002_FILES) and not any(
+            d in relpath for d in _FL002_DIRS):
+        return []
+    out = []
+    jit_names = _jit_target_names(tree)
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        params = {a.arg for a in (
+            fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs)}
+        in_jit = fn.name in jit_names or _is_jit_decorated(fn)
+        for node in _own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if f.attr == "item" and not node.args:
+                    out.append(Finding(
+                        "FL002", relpath, node.lineno,
+                        ".item() forces a device->host sync in the hot path"))
+                elif f.attr == "block_until_ready":
+                    out.append(Finding(
+                        "FL002", relpath, node.lineno,
+                        ".block_until_ready() stalls the dispatch pipeline"))
+                elif f.attr == "device_get":
+                    out.append(Finding(
+                        "FL002", relpath, node.lineno,
+                        "jax.device_get transfers device data in the hot path"))
+                elif (f.attr == "asarray" and isinstance(f.value, ast.Name)
+                      and f.value.id in ("np", "numpy", "onp")):
+                    arg = node.args[0] if node.args else None
+                    if not (isinstance(arg, ast.Name) and arg.id in params):
+                        out.append(Finding(
+                            "FL002", relpath, node.lineno,
+                            "np.asarray on a computed value is a device->host "
+                            "transfer; only the sanctioned per-step transfer "
+                            "may sync"))
+                elif (in_jit and isinstance(f.value, ast.Name)
+                      and f.value.id in ("np", "numpy", "onp")):
+                    out.append(Finding(
+                        "FL002", relpath, node.lineno,
+                        f"host numpy (np.{f.attr}) inside a jit-target "
+                        f"function traces to a constant or forces a sync"))
+            elif (in_jit and isinstance(f, ast.Name)
+                  and f.id in ("int", "float")):
+                arg = node.args[0] if node.args else None
+                if not isinstance(arg, ast.Constant):
+                    out.append(Finding(
+                        "FL002", relpath, node.lineno,
+                        f"{f.id}() on a traced value inside a jit-target "
+                        f"function forces a concretization sync"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FL003 — deprecated shim usage
+# ---------------------------------------------------------------------------
+def _module_definitions(tree: ast.AST) -> set[str]:
+    defined: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            defined.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    defined.add(tgt.id)
+    return defined
+
+
+def _rule_fl003(tree: ast.AST, relpath: str) -> list[Finding]:
+    defined = _module_definitions(tree)
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in _SHIM_NAMES:
+                    out.append(Finding(
+                        "FL003", relpath, node.lineno,
+                        f"imports deprecated shim {alias.name!r}; use the "
+                        f"plan-first registry API"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if name in _SHIM_NAMES and name not in defined:
+                out.append(Finding(
+                    "FL003", relpath, node.lineno,
+                    f"calls deprecated shim {name!r}; internal code must use "
+                    f"the plan-first registry API"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FL004 — custom_vjp residual discipline
+# ---------------------------------------------------------------------------
+def _call_bound_names(fn: ast.FunctionDef) -> set[str]:
+    """Names bound (directly or by tuple unpack) from a Call result."""
+    bound: set[str] = set()
+    for node in _own_nodes(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    bound.add(tgt.id)
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    bound.update(e.id for e in tgt.elts
+                                 if isinstance(e, ast.Name))
+    return bound
+
+
+def _rule_fl004(tree: ast.AST, relpath: str) -> list[Finding]:
+    fns = {n.name: n for n in ast.walk(tree)
+           if isinstance(n, ast.FunctionDef)}
+    fwd_names = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "defvjp" and node.args
+                and isinstance(node.args[0], ast.Name)):
+            fwd_names.append(node.args[0].id)
+    out = []
+    for name in fwd_names:
+        fwd = fns.get(name)
+        if fwd is None:
+            continue
+        params = {a.arg for a in (
+            fwd.args.posonlyargs + fwd.args.args + fwd.args.kwonlyargs)}
+        from_call = _call_bound_names(fwd)
+        for node in _own_nodes(fwd):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            ret = node.value
+            if not (isinstance(ret, ast.Tuple) and len(ret.elts) == 2):
+                continue
+            primal, residuals = ret.elts
+            # only the LEADING primal element is the sequence-shaped
+            # kernel output; trailing aux outputs (carry totals) are
+            # legitimate residuals and the auditor byte-budgets them
+            lead = primal.elts[0] if (isinstance(primal, ast.Tuple)
+                                      and primal.elts) else primal
+            primal_names = ({lead.id} if isinstance(lead, ast.Name)
+                            else set())
+            if not isinstance(residuals, ast.Tuple):
+                out.append(Finding(
+                    "FL004", relpath, node.lineno,
+                    f"{name}: residuals are not a literal tuple; the kernel "
+                    f"auditor's byte budget is the only check left",
+                    severity="warning"))
+                continue
+            for elt in residuals.elts:
+                if isinstance(elt, ast.Constant):
+                    continue
+                if isinstance(elt, ast.Name):
+                    if elt.id in primal_names:
+                        out.append(Finding(
+                            "FL004", relpath, node.lineno,
+                            f"{name}: residual {elt.id!r} is the primal "
+                            f"output — sequence-shaped and recomputable; "
+                            f"save inputs or kernel aux outputs instead"))
+                    elif elt.id not in params and elt.id not in from_call:
+                        out.append(Finding(
+                            "FL004", relpath, node.lineno,
+                            f"{name}: residual {elt.id!r} is a derived local "
+                            f"(not an input or kernel aux output); the O(d^2) "
+                            f"state contract forbids opaque residuals"))
+                else:
+                    out.append(Finding(
+                        "FL004", relpath, node.lineno,
+                        f"{name}: residual is an inline expression; bind "
+                        f"kernel aux outputs to names so their shapes are "
+                        f"auditable"))
+    return out
+
+
+_RULE_FNS = (_rule_fl001, _rule_fl002, _rule_fl003, _rule_fl004)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+def lint_source(source: str, relpath: str) -> list[Finding]:
+    """Lint one module's source under the scoping rules for ``relpath``.
+
+    ``relpath`` is a repo-relative posix path (e.g.
+    ``"src/repro/serving/worker.py"``); it selects which rules apply, so
+    fixtures can opt into a rule's scope without touching the tree.
+    """
+    relpath = _norm(relpath)
+    tree = ast.parse(source)
+    suppressed = _suppressions(source)
+    findings: list[Finding] = []
+    for rule_fn in _RULE_FNS:
+        for f in rule_fn(tree, relpath):
+            ids = suppressed.get(f.line, ())
+            if f.rule in ids or "all" in ids:
+                continue
+            findings.append(f)
+    return findings
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path) -> list[Finding]:
+    """Lint one file, reporting paths relative to ``root``."""
+    rel = _norm(str(path.relative_to(root)))
+    return lint_source(path.read_text(), rel)
+
+
+def lint_tree(root: pathlib.Path, subdir: str = "src/repro") -> list[Finding]:
+    """Lint every ``*.py`` under ``root/subdir``; paths are root-relative."""
+    findings: list[Finding] = []
+    for path in sorted((root / subdir).rglob("*.py")):
+        findings.extend(lint_file(path, root))
+    return findings
+
+
+def load_baseline(path: pathlib.Path | None = None) -> set[str]:
+    """Load the grandfathered finding keys (``rule:path:line``)."""
+    path = path or DEFAULT_BASELINE
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {str(k) for k in data.get("findings", [])}
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: set[str]) -> list[Finding]:
+    """Drop findings whose key is grandfathered in the baseline."""
+    return [f for f in findings if f.key not in baseline]

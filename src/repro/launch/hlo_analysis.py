@@ -26,19 +26,18 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
+# the canonical dtype -> bytes table lives in repro.utils so the HLO
+# parser, the quantized-pool accounting, and the kernel auditor agree
+from repro.utils import HLO_DTYPE_BYTES as _DTYPE_BYTES
 
 _COLLECTIVES = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
     "collective-permute",
 )
 
+# longest-first so f8e4m3fn wins over f8... prefixes as the table grows
 _SHAPE_RE = re.compile(
-    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    "(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True)) + r")"
     r"\[([0-9,]*)\]"
 )
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")

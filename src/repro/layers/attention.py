@@ -523,6 +523,7 @@ def _paged_decode(params, q, k, v, cache, cfg: ModelConfig,
         vc = store.v.at[pid, :, off].set(vq)
         ksc = pool.scale.k.at[pid, :, off].set(ks)
         vsc = pool.scale.v.at[pid, :, off].set(vs)
+        # flowlint: disable=FL001 -- utility gather below the registry; self-falls-back off-TPU
         from repro.kernels.gather import paged_gather_quant
 
         kg, vg = paged_gather_quant(kc, vc, ksc, vsc, page_table,
@@ -537,6 +538,7 @@ def _paged_decode(params, q, k, v, cache, cfg: ModelConfig,
         # page-table gather is a Pallas kernel writing the
         # (B, Hkv, MP*page, D) layout directly; off-TPU it stays a plain
         # XLA gather.
+        # flowlint: disable=FL001 -- utility gather below the registry; self-falls-back off-TPU
         from repro.kernels.gather import paged_gather
 
         kg, vg = paged_gather(kc, vc, page_table)

@@ -129,6 +129,7 @@ def _boundary_conv_history(xb: Array, lengths: Array, k: int) -> Array:
     the raw stream once (no padded-stream materialization); off-TPU it
     stays the XLA pad + ``take_along_axis``.
     """
+    # flowlint: disable=FL001 -- utility gather below the registry; self-falls-back off-TPU
     from repro.kernels.gather import boundary_gather
 
     return boundary_gather(xb, lengths, k)

@@ -185,6 +185,7 @@ def _ssd_forward(params, x: Array, cfg: ModelConfig, state: SSDState | None,
     h0 = None if state is None else state.h
     if state is None and jax.default_backend() == "tpu":
         # training path on TPU: fused Pallas chunk kernel (state discarded)
+        # flowlint: disable=FL001 -- the ssd mixer IS this kernel's provider (no registry tier between)
         from repro.kernels.ssd_chunk import ssd_scan_pallas
 
         y = ssd_scan_pallas(xh, dt, bmat.astype(jnp.float32),

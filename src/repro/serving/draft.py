@@ -117,7 +117,7 @@ class SelfDraft(DraftSource):
         drafts = self._propose(w.params,
                                jnp.asarray(tokens, jnp.int32)[:, None],
                                w.caches, jnp.asarray(pos, jnp.int32), table)
-        return np.asarray(drafts)
+        return np.asarray(drafts)  # flowlint: disable=FL002 -- draft window's one transfer per propose
 
 
 class ModelDraft(DraftSource):
@@ -181,7 +181,7 @@ class ModelDraft(DraftSource):
         drafts, self._pending = self._propose(
             self.pool.params, jnp.asarray(tokens, jnp.int32)[:, None],
             self.pool.caches, jnp.asarray(pos, jnp.int32))
-        return np.asarray(drafts)
+        return np.asarray(drafts)  # flowlint: disable=FL002 -- draft window's one transfer per propose
 
     def commit(self, accepted, live):
         if self._pending is None:

@@ -41,6 +41,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.utils import dtype_bytes
+
 __all__ = [
     "QuantSpec", "QuantizedPool", "QuantTraj", "QUANT_DTYPES",
     "STATE_DTYPES", "spec_of", "platform_support", "state_dtype_of",
@@ -278,7 +280,7 @@ def maybe_quantize(state: Any, plan) -> Any:
 
 def pool_bytes(tree) -> int:
     """Total device bytes of a cache tree (pools count payload + scales)."""
-    return sum(int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return sum(int(leaf.size) * dtype_bytes(leaf.dtype)
                for leaf in jax.tree_util.tree_leaves(tree))
 
 

@@ -35,8 +35,7 @@ import numpy as np
 
 import dataclasses
 
-from repro.attention.plan import ExecutionPlan
-from repro.attention.recurrent import FlowState
+from repro.attention import ExecutionPlan, FlowState
 from repro.config import ModelConfig
 from repro.layers.attention import KVCache, LinearState, MLACache, plan_of
 from repro.layers.mixer import stack_capabilities
@@ -351,6 +350,7 @@ class Worker:
                 None if offs is None else jnp.asarray(offs),
                 jnp.asarray(temps, jnp.float32), self._key, self._next_draw(),
             )
+            # flowlint: disable=FL002 -- the packed prefill's one sanctioned transfer
             return np.asarray(first)
         # fallback: one prefill per request (stacks with a non-packable
         # mixer — today local-attention rings)
@@ -369,7 +369,7 @@ class Worker:
                 jnp.asarray(temps[i : i + 1], jnp.float32),
                 self._key, self._next_draw(),
             )
-            firsts[i] = np.asarray(first)[0]
+            firsts[i] = np.asarray(first)[0]  # flowlint: disable=FL002 -- per-request fallback's sanctioned transfer
         return firsts
 
     # ------------------------------------------------------------------
@@ -387,7 +387,7 @@ class Worker:
             jnp.asarray(temps, jnp.float32), jnp.asarray(live),
             self._key, self._next_draw(),
         )
-        return np.asarray(toks)  # the step's single host transfer
+        return np.asarray(toks)  # flowlint: disable=FL002 -- the step's single host transfer
 
     # ------------------------------------------------------------------
     def verify(self, tokens: np.ndarray, drafts: np.ndarray,
@@ -418,4 +418,5 @@ class Worker:
             jnp.asarray(temps, jnp.float32), jnp.asarray(live),
             self._key, self._next_draw(),
         )
+        # flowlint: disable=FL002 -- the verify window's one sanctioned transfer
         return np.asarray(emitted), np.asarray(accepted)

@@ -62,7 +62,7 @@ def tree_size(tree: PyTree) -> int:
 
 
 def tree_bytes(tree: PyTree) -> int:
-    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    return sum(int(np.prod(x.shape)) * dtype_bytes(x.dtype) for x in jax.tree.leaves(tree))
 
 
 def tree_cast(tree: PyTree, dtype) -> PyTree:
@@ -87,6 +87,33 @@ def flatten_dict(d: dict, prefix: str = "") -> Iterator[tuple[str, Any]]:
 def global_norm(tree: PyTree) -> jax.Array:
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
     return jnp.sqrt(sum(leaves))
+
+
+# ---------------------------------------------------------------------------
+# Dtype accounting
+# ---------------------------------------------------------------------------
+#: Canonical HLO-mnemonic -> bytes-per-element table.  This is THE byte
+#: table: ``launch.hlo_analysis`` parses optimized HLO against its keys,
+#: ``serving.quant.pool_bytes`` and the ``repro.analysis`` kernel auditor
+#: account device buffers through :func:`dtype_bytes`.  Keeping one copy
+#: means a new dtype (fp8 variants, fp4, ...) lands everywhere at once.
+HLO_DTYPE_BYTES: dict[str, int] = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element of ``dtype``.
+
+    Accepts an HLO mnemonic (``"f32"``, ``"bf16"``, ``"f8e4m3fn"``), a
+    numpy/jax dtype object, or any string ``np.dtype`` understands
+    (``"int8"``).  fp8 dtypes resolve through ``ml_dtypes`` itemsize.
+    """
+    if isinstance(dtype, str) and dtype in HLO_DTYPE_BYTES:
+        return HLO_DTYPE_BYTES[dtype]
+    return int(np.dtype(dtype).itemsize)
 
 
 # ---------------------------------------------------------------------------
