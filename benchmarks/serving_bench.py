@@ -20,6 +20,16 @@ state decode throughput per (variant, slots, context) cell:
     plus fp32 per-(slot, head) scales, decode through the quant-capable
     kernel variants.
 
+  * ``fleet_flow`` / ``fleet_paged`` — the disaggregated ``FleetEngine``
+    (1 prefill + 2 decode workers, ``serving/fleet.py``) at 4x/8x the
+    longest context.  Beyond tokens/s these rows measure the migration
+    path itself: ``kb_migrated`` (mean StateBundle KiB per request
+    moved) and ``migs_s`` (mid-stream migrations per second, full
+    export->install round trips).  The printed comparison is the
+    paper's portability claim: a flow request's bundle is O(d^2)
+    constant, >=10x smaller than the equivalent paged-KV transfer at
+    these context lengths.
+
 Cells are named ``serve_<ctx>`` so ``regression_gate.py`` sweeps them with
 the same tolerance machinery as the training/inference cells, and every
 row gets a ``trend_vs_ctx`` column — throughput ratio shortest/longest
@@ -45,6 +55,7 @@ from repro.configs import get_config
 from repro.layers.attention import plan_of
 from repro.models import lm
 from repro.serving.engine import Engine, PagedSpec, Request
+from repro.serving.fleet import FleetEngine
 
 
 def pool_slot_kb(caches, slots: int) -> float:
@@ -93,6 +104,48 @@ def _bench_cell(params, cfg, *, slots: int, ctx: int, steps: int,
     dt = time.time() - t0
     tokens = sum(len(r.generated) for r in reqs) - count0
     return tokens / dt, tokens / (steps * slots), kb_slot
+
+
+def _bench_fleet_cell(params, cfg, *, slots: int, ctx: int, steps: int,
+                      paged: PagedSpec | None):
+    """Fleet decode tokens/s plus the migration-path figures.
+
+    Fills a 1-prefill + 2-decode fleet (``2 x (slots - 1)`` live
+    requests at context ``ctx`` — one slot per worker stays free so the
+    post-loop migrations have somewhere to land), times ``steps`` fleet
+    iterations, then migrates every live request once between the
+    decode workers and times the full export->install round trips.
+    Returns (tokens/s, mean KiB per migrated bundle, migrations/s)."""
+    plan = plan_of(cfg, paged=paged, packed=True)
+    budget = steps + 8  # headroom: requests must outlive the timed loop
+    fleet = FleetEngine(params, cfg, prefill=1, decode=2, slots=slots,
+                        max_len=ctx + budget + 8, plan=plan)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(2 * (slots - 1)):
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, ctx).astype(np.int32),
+            max_new_tokens=budget,
+        ))
+        fleet.submit(reqs[-1])
+    fleet.step()  # admission (packed prefill + bundle install) + warm
+    count0 = sum(len(r.generated) for r in reqs)
+    t0 = time.time()
+    for _ in range(steps):
+        fleet.step()
+    dt = time.time() - t0
+    tokens = sum(len(r.generated) for r in reqs) - count0
+    # migration microbench: bounce every live request to the other worker
+    live = [r.uid for r in reqs if fleet.locate(r.uid) is not None]
+    assert live, "migration bench needs live requests after the timed loop"
+    before = fleet.bytes_migrated
+    t0 = time.time()
+    for uid in live:
+        fleet.migrate(uid)
+    mig_dt = time.time() - t0
+    kb = (fleet.bytes_migrated - before) / max(len(live), 1) / 1024.0
+    return tokens / dt, kb, len(live) / max(mig_dt, 1e-9)
 
 
 def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
@@ -155,8 +208,33 @@ def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
             if spec_k:
                 row["accept_len"] = round(alen, 2)
             rows[f"{name}[s{s}]"] = row
-    cols = [f"serve_{c}" for c in ctxs] + ["kb_slot", "tps_per_gb",
-                                           "trend_vs_ctx", "accept_len"]
+    # fleet rows at 4x/8x the longest context: the KV-vs-flow migration
+    # gap grows linearly with context (the flow bundle doesn't), so
+    # bench the migration path where portability actually matters
+    fleet_ctxs = (4 * ctxs[-1], 8 * ctxs[-1])
+    fleet_len = fleet_ctxs[-1] + steps + 32
+    fleet_variants = [("fleet_flow", with_kind(base, "flow"), None),
+                      ("fleet_paged", with_kind(base, "softmax"), page)]
+    s = slots[-1]
+    for name, cfg, paged in fleet_variants:
+        if cfg.max_seq_len < fleet_len:
+            cfg = dataclasses.replace(cfg, max_seq_len=fleet_len)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        row = {}
+        for ctx in fleet_ctxs:
+            tps, kb, migs = _bench_fleet_cell(
+                params, cfg, slots=s, ctx=ctx, steps=steps, paged=paged)
+            row[f"serve_{ctx}"] = round(tps, 2)
+        row["kb_migrated"] = round(kb, 1)
+        row["migs_s"] = round(migs, 1)
+        row["trend_vs_ctx"] = round(
+            row[f"serve_{fleet_ctxs[0]}"]
+            / max(row[f"serve_{fleet_ctxs[-1]}"], 1e-9), 2)
+        rows[f"{name}[s{s}]"] = row
+    cols = [f"serve_{c}" for c in ctxs] + \
+        [f"serve_{c}" for c in fleet_ctxs if c not in ctxs] + \
+        ["kb_slot", "tps_per_gb", "kb_migrated", "migs_s",
+         "trend_vs_ctx", "accept_len"]
     print_table("Serving: decode tokens/s by slots x context", rows, cols)
     for name in rows:
         if name.startswith(("flow_q8", "paged_q8", "hybrid_rg_q8")):
@@ -168,6 +246,13 @@ def run(*, slots: tuple = (2, 4), ctxs: tuple = (64, 128),
                       "smaller, density x"
                       f"{q8['tps_per_gb'] / max(full['tps_per_gb'], 1e-9):.2f}"
                       " vs full precision")
+    ff, fp = rows.get(f"fleet_flow[s{s}]"), rows.get(f"fleet_paged[s{s}]")
+    if ff and fp:
+        ratio = fp["kb_migrated"] / max(ff["kb_migrated"], 1e-9)
+        print(f"\n[fleet] migration bundle at ctx {fleet_ctxs[-1]}: "
+              f"flow {ff['kb_migrated']} KiB vs paged KV "
+              f"{fp['kb_migrated']} KiB -> x{ratio:.1f} smaller "
+              f"({ff['migs_s']:.0f} vs {fp['migs_s']:.0f} migrations/s)")
     print("\n[trend] decode throughput ratio ctx "
           f"{ctxs[0]} -> {ctxs[-1]} (1.0 = flat in context length):")
     for name, row in rows.items():

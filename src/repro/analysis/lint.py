@@ -61,8 +61,10 @@ _SUPPRESS_RE = re.compile(r"#\s*flowlint:\s*disable=([A-Za-z0-9_,]+)")
 # resolve_mixer() rather than binding an implementation module directly
 _FL001_DIRS = ("repro/layers/", "repro/models/", "repro/serving/")
 
-# FL002 scope: the serving hot loop and every kernel wrapper module
-_FL002_FILES = ("repro/serving/worker.py", "repro/serving/draft.py")
+# FL002 scope: the serving hot loop (fleet router + transport included)
+# and every kernel wrapper module
+_FL002_FILES = ("repro/serving/worker.py", "repro/serving/draft.py",
+                "repro/serving/fleet.py", "repro/serving/transport.py")
 _FL002_DIRS = ("repro/kernels/",)
 
 # FL003: warn-once legacy names (layers/mixer.make_legacy_shim products

@@ -14,6 +14,13 @@ decode; see docs/serving.md):
 
     python -m repro.launch.serve --arch flowformer-lm --smoke \
         --draft self --speculate-k 4
+
+Disaggregated fleet serving (prefill/decode worker groups with bundle
+hand-off, rebalancing and failover; see docs/serving.md):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve --arch flowformer-lm --smoke \
+        --requests 16 --fleet prefill:1,decode:3
 """
 from __future__ import annotations
 
@@ -29,6 +36,19 @@ from repro.configs import get_config, get_smoke_config
 from repro.layers.attention import plan_of
 from repro.models import lm
 from repro.serving.engine import Engine, PagedSpec, Request
+from repro.serving.fleet import FleetEngine
+
+
+def _parse_fleet(spec: str) -> tuple[int, int]:
+    """``prefill:N,decode:M`` -> (N, M), with loud errors."""
+    sizes = {"prefill": 1, "decode": 2}
+    for part in spec.split(","):
+        name, _, num = part.partition(":")
+        if name not in sizes or not num.isdigit() or int(num) < 1:
+            raise SystemExit(
+                f"--fleet expects 'prefill:N,decode:M' (got {spec!r})")
+        sizes[name] = int(num)
+    return sizes["prefill"], sizes["decode"]
 
 
 def main():
@@ -64,7 +84,16 @@ def main():
     ap.add_argument("--speculate-k", type=int, default=0,
                     help="drafted tokens per verify window (0 = plain "
                     "decode; implies --draft self when unset)")
+    ap.add_argument("--fleet", default=None, metavar="prefill:N,decode:M",
+                    help="serve through FleetEngine: disaggregated "
+                    "prefill/decode worker groups with StateBundle "
+                    "hand-off (run with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8 to place "
+                    "the groups on disjoint simulated devices)")
     args = ap.parse_args()
+    if args.fleet and args.speculate_k:
+        raise SystemExit("--fleet serves plain decode only (speculative "
+                         "windows stay a single-engine feature)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn:
@@ -81,11 +110,23 @@ def main():
                    speculate_k=args.speculate_k,
                    state_dtype=args.state_dtype)
     dtype = {"bf16": jnp.bfloat16, "fp32": jnp.float32}[args.dtype]
-    engine = Engine(params, cfg, slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8, plan=plan,
-                    dtype=dtype, draft=args.draft,
-                    speculate_k=args.speculate_k)
-    print(f"[serve] attention plan: {engine.worker.plan.describe()}")
+    max_len = args.prompt_len + args.max_new + 8
+    if args.fleet:
+        n_pre, n_dec = _parse_fleet(args.fleet)
+        engine = FleetEngine(params, cfg, prefill=n_pre, decode=n_dec,
+                             slots=args.slots, max_len=max_len, plan=plan,
+                             dtype=dtype, paged=paged,
+                             state_dtype=args.state_dtype)
+        worker0 = engine.workers[0]
+        print(f"[serve] fleet: {n_pre} prefill + {n_dec} decode workers, "
+              f"{len(jax.devices())} host devices "
+              f"(decode group: {[d.id for d in engine.dmesh.devices.flat]})")
+    else:
+        engine = Engine(params, cfg, slots=args.slots, max_len=max_len,
+                        plan=plan, dtype=dtype, draft=args.draft,
+                        speculate_k=args.speculate_k)
+        worker0 = engine.worker
+    print(f"[serve] attention plan: {worker0.plan.describe()}")
     print(f"[serve] dtypes: activations={args.dtype} "
           f"state_pools={args.state_dtype or args.dtype}")
     rng = np.random.default_rng(0)
@@ -109,10 +150,17 @@ def main():
     total_tokens = sum(len(r.generated) for r in reqs)
     print(f"[serve] {args.requests} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/max(dt,1e-9):.1f} tok/s, {steps} steps)")
-    if engine.draft is not None:
+    if args.fleet:
+        kb_moved = engine.bytes_migrated / 1024.0
+        kb_req = np.mean(list(engine.kb_by_uid.values()) or [0.0])
+        print(f"[serve] fleet: loads={engine.loads()}, "
+              f"{engine.migrations} migrations ({kb_moved:.1f} KiB moved), "
+              f"{engine.recoveries} recoveries, "
+              f"~{kb_req:.1f} KiB of state moved per request")
+    elif engine.draft is not None:
         print(f"[serve] speculative: k={engine.speculate_k}, "
               f"~{total_tokens/max(steps,1):.2f} tokens committed per step")
-    alloc = engine.worker.allocator
+    alloc = worker0.allocator
     if alloc is not None:
         print(f"[serve] paged KV: page_size={alloc.page_size} "
               f"pool={alloc.num_pages} pages, {alloc.free_pages} free after "

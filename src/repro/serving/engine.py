@@ -47,7 +47,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.serving.draft import DraftSource, SelfDraft
 from repro.serving.paged import PagedSpec
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request, Scheduler, budget_met
 from repro.serving.worker import Worker
 
 __all__ = ["Engine", "Request", "PagedSpec"]
@@ -209,9 +209,7 @@ class Engine:
                 self.draft.admit([r.prompt for r in batch], slot_ids)
             for req, slot, tok in zip(batch, slot_ids, first):
                 req.generated.append(int(tok))
-                if (len(req.generated) >= req.max_new_tokens
-                        or (req.eos_id is not None
-                            and int(tok) == req.eos_id)):
+                if budget_met(req, int(tok)):
                     # budget met (or EOS) by the prefill token: retire
                     # immediately; the slot stays free and the outer loop
                     # re-offers it

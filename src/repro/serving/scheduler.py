@@ -31,6 +31,16 @@ class Request:
     done: bool = False
 
 
+def budget_met(req: Request, tok: int) -> bool:
+    """Did appending ``tok`` complete ``req``?  (budget or EOS reached)
+
+    The single retirement predicate shared by the engine's admission
+    path, the scheduler's step bookkeeping and the fleet router.
+    """
+    return (len(req.generated) >= req.max_new_tokens
+            or (req.eos_id is not None and tok == req.eos_id))
+
+
 class Scheduler:
     """FIFO queue + fixed-width slot table (pure host state)."""
 
@@ -67,9 +77,24 @@ class Scheduler:
     # ------------------------------------------------------------------
     def activate(self, slot: int, req: Request):
         """Install an admitted request into ``slot`` (position, temp)."""
+        self.adopt(slot, req, pos=len(req.prompt))
+
+    def adopt(self, slot: int, req: Request, *, pos: int):
+        """Install a request mid-stream at an explicit consumed position.
+
+        The fleet router's migration/failover paths land requests whose
+        state already consumed ``pos`` tokens (prompt + committed
+        generations); plain admission is the ``pos == len(prompt)`` case.
+        """
         self.active[slot] = req
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = pos
         self.temps[slot] = req.temperature
+
+    def deactivate(self, slot: int):
+        """Clear a slot WITHOUT retiring its request (migration source)."""
+        self.active[slot] = None
+        self.pos[slot] = 0
+        self.temps[slot] = 0.0
 
     def retire(self, req: Request):
         """Mark a request done and move it to the finished list."""
@@ -90,8 +115,7 @@ class Scheduler:
             tok = int(tokens[i])
             req.generated.append(tok)
             self.pos[i] += 1
-            if (len(req.generated) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
+            if budget_met(req, tok):
                 self.retire(req)
                 self.active[i] = None
                 freed.append(int(i))
@@ -119,8 +143,7 @@ class Scheduler:
             for j in range(take):
                 tok = int(emitted[i, j])
                 req.generated.append(tok)
-                if (len(req.generated) >= req.max_new_tokens
-                        or (req.eos_id is not None and tok == req.eos_id)):
+                if budget_met(req, tok):
                     done = True
                     break
             self.pos[i] += take

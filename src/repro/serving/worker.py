@@ -177,7 +177,7 @@ class Worker:
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int,
                  paged: PagedSpec | None = None, seed: int = 0,
                  plan: ExecutionPlan | None = None, dtype=jnp.bfloat16,
-                 state_dtype: str | None = None):
+                 state_dtype: str | None = None, device=None):
         """Build the cache pool, the serving plan and the jitted hot-path fns.
 
         ``dtype`` — serving activation dtype (default bfloat16; fp32
@@ -193,7 +193,15 @@ class Worker:
         and route decode through the quant-capable kernel variants.  The
         resolution registries reject plans whose backends would have to
         silently dequantize.
+
+        ``device`` — pin this worker's params, cache pool and RNG key to
+        one device (fleet workers each own a device of their group's
+        mesh).  Committed inputs place every jitted call there; the
+        default ``None`` keeps jax's default placement.
         """
+        if device is not None:
+            params = jax.device_put(params, device)
+        self.device = device
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -215,6 +223,9 @@ class Worker:
         self.caches = lm.init_caches(cfg, slots, max_len, plan=self.plan,
                                      dtype=dtype)
         self._key = jax.random.PRNGKey(seed)
+        if device is not None:
+            self.caches = jax.device_put(self.caches, device)
+            self._key = jax.device_put(self._key, device)
         self._draws = 0
         xplan = self.plan
 
@@ -262,17 +273,35 @@ class Worker:
             greedy = jnp.argmax(logits, axis=-1)  # (S, n)
             drafts = toks[:, 1:]
             match = (greedy[:, :-1] == drafts).astype(jnp.int32)
-            accepted = jnp.cumprod(match, axis=1).sum(axis=1)  # (S,) [0, n-1]
-            # temperature slots fall back to accept-0 so every emitted
-            # token is properly sampled — greedy-match acceptance is only
-            # distribution-exact for greedy slots
-            accepted = jnp.where(temps > 0, 0, accepted)
+            acc_greedy = jnp.cumprod(match, axis=1).sum(axis=1)  # (S,) [0, n-1]
+            # temperature slots use speculative rejection sampling: draft
+            # j is accepted iff u_j < p_target(d_j) / q_draft(d_j); the
+            # shipped draft sources propose greedily (a point mass,
+            # q(d_j) = 1), so the threshold is the target probability
+            # itself and the scheme is distribution-exact
+            ukey, bkey = jax.random.split(jax.random.fold_in(key, draw))
+            tsafe = jnp.where(temps > 0, temps, 1.0)[:, None, None]
+            probs = jax.nn.softmax(logits / tsafe, axis=-1)  # (S, n, V)
+            p_draft = jnp.take_along_axis(
+                probs[:, :-1], drafts[..., None], axis=-1)[..., 0]  # (S, n-1)
+            u = jax.random.uniform(ukey, drafts.shape)
+            acc_temp = jnp.cumprod((u < p_draft).astype(jnp.int32),
+                                   axis=1).sum(axis=1)
+            accepted = jnp.where(temps > 0, acc_temp, acc_greedy)
             # ONE batched draw for the bonus/correction token, sampled from
-            # the verify logits at each slot's own boundary
+            # the verify logits at each slot's own boundary; a rejecting
+            # temperature slot must NOT re-emit the rejected draft — the
+            # residual (p - min(p, q))+ of a point-mass draft is p with
+            # the draft token zeroed, i.e. mask it out and renormalize
             bonus_logits = jnp.take_along_axis(
-                logits, accepted[:, None, None], axis=1)[:, 0]
-            bonus = sample_tokens(jax.random.fold_in(key, draw),
-                                  bonus_logits, temps, live)
+                logits, accepted[:, None, None], axis=1)[:, 0]  # (S, V)
+            rejected = jnp.take_along_axis(
+                jnp.pad(drafts, ((0, 0), (0, 1))), accepted[:, None],
+                axis=1)[:, 0]
+            mask = ((temps > 0) & (accepted < n - 1))[:, None] & \
+                (jnp.arange(logits.shape[-1])[None, :] == rejected[:, None])
+            bonus_logits = jnp.where(mask, -jnp.inf, bonus_logits)
+            bonus = sample_tokens(bkey, bonus_logits, temps, live)
             j = jnp.arange(n)[None, :]
             padded = jnp.pad(drafts, ((0, 0), (0, 1)))
             emitted = jnp.where(j < accepted[:, None], padded, 0)

@@ -96,6 +96,29 @@ def test_fl002_block_until_ready_trips():
     assert rules_of(lint_source(src, KERNEL)) == ["FL002"]
 
 
+def test_fl002_fleet_and_transport_in_scope():
+    # the fleet router and the state transport are hot-path modules: an
+    # unsanctioned sync there stalls every decode worker behind it
+    src = ("import numpy as np\n"
+           "def export(self, worker, slot):\n"
+           "    leaves = gather(worker.caches, slot)\n"
+           "    return np.asarray(leaves)\n")
+    for path in ("src/repro/serving/fleet.py",
+                 "src/repro/serving/transport.py"):
+        assert rules_of(lint_source(src, path)) == ["FL002"]
+
+
+def test_fl002_fleet_sanctioned_transfer_passes():
+    # the transport's export IS the sanctioned migration transfer — it
+    # carries the reasoned suppression and must stay silent
+    src = ("import numpy as np\n"
+           "def export(self, worker, slot):\n"
+           "    leaves = gather(worker.caches, slot)\n"
+           "    return np.asarray(leaves)  "
+           "# flowlint: disable=FL002 -- sanctioned migration transfer\n")
+    assert lint_source(src, "src/repro/serving/transport.py") == []
+
+
 # ---------------------------------------------------------------------------
 # FL003 — deprecated shims
 # ---------------------------------------------------------------------------

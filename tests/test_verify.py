@@ -218,6 +218,83 @@ def test_worker_verify_accept_all_and_accept_zero():
     assert cont[1] == oracle[1, 1], "accept-0 slot must redo position pos+1"
 
 
+def test_temperature_rejection_sampling_distribution():
+    """Temperature slots accept drafts by rejection sampling, exactly.
+
+    For the shipped greedy draft sources the proposal is a point mass, so
+    the accept threshold is the target probability itself and the emitted
+    first token's marginal must equal the plain-decode sampling
+    distribution softmax(logits / T).  Checked empirically (total
+    variation against the exact distribution from a plain decode on a
+    cache clone) plus two structural properties: acceptance actually
+    happens (no more accept-0 fallback), and a rejecting slot never
+    re-emits the rejected draft token (the correction distribution masks
+    it out).
+    """
+    cfg = _small_cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    k, temp = 2, 1.0
+    w = Worker(params, cfg, slots=1, max_len=64, dtype=jnp.float32)
+    first = w.prefill([np.arange(1, 8, dtype=np.int32)], [0],
+                      np.zeros(1, np.float32))
+    pos = np.array([7], np.int64)
+    temps = np.array([temp], np.float32)
+    live = np.array([True])
+
+    # exact next-token distribution from a plain decode on a cache clone
+    clone = jax.tree_util.tree_map(jnp.array, w.caches)
+    logits, _ = lm.decode(params, jnp.asarray(first)[:, None], clone, cfg,
+                          jnp.asarray(pos), plan=w.plan, dtype=jnp.float32)
+    p_exact = np.asarray(
+        jax.nn.softmax(logits[0, -1].astype(jnp.float32) / temp))
+
+    draft = SelfDraft()
+    draft.install(w, k)
+    drafts = draft.propose(first, pos, live)  # greedy: the point-mass q
+    d0 = int(drafts[0, 0])
+
+    snap = jax.tree_util.tree_map(jnp.array, w.caches)
+    counts = np.zeros(cfg.vocab_size, np.int64)
+    n_accepted = 0
+    trials = 1200
+    for _ in range(trials):
+        # verify donates the caches; restore the snapshot each trial
+        w.caches = jax.tree_util.tree_map(jnp.array, snap)
+        emitted, accepted = w.verify(first, drafts, pos, temps, live)
+        tok = int(emitted[0, 0])
+        counts[tok] += 1
+        if int(accepted[0]) > 0:
+            n_accepted += 1
+            assert tok == d0, "an accepting slot must emit the draft"
+        else:
+            assert tok != d0, ("a rejecting slot must not re-emit the "
+                               "rejected draft (correction masks it)")
+    # acceptance rate of the first draft estimates p_exact[d0]
+    assert n_accepted > 0, "rejection sampling must actually accept drafts"
+    assert abs(n_accepted / trials - p_exact[d0]) < 0.06
+    tv = 0.5 * np.abs(counts / trials - p_exact).sum()
+    assert tv < 0.13, f"emitted-token TV distance {tv:.3f} vs plain decode"
+
+
+def test_speculative_temperature_commits_multiple_tokens():
+    """With a sharp temperature the greedy draft is near-certain to be
+    accepted, so a temperature slot must now retire in fewer engine steps
+    than tokens (the accept-0 fallback pinned steps == tokens)."""
+    cfg = _small_cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = Engine(params, cfg, slots=1, max_len=96, dtype=jnp.float32,
+                    draft="self", speculate_k=3)
+    req = Request(uid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                  max_new_tokens=12, temperature=0.05)
+    engine.submit(req)
+    steps = 0
+    while not req.done and steps < 50:
+        engine.step()
+        steps += 1
+    assert req.done and len(req.generated) == 12
+    assert steps < 12, f"no drafts accepted in {steps} steps"
+
+
 def test_scheduler_record_verify_eos_and_budget():
     sched = Scheduler(slots=2)
     r0 = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
